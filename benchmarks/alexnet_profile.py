@@ -1,0 +1,44 @@
+"""B-AlexNet per-layer cost profile — shared input for the Fig. 4/5/6
+reproductions.
+
+The paper measures t_i^c on Google Colab (K80); we measure the same chain
+on the local device (and cache it as JSON so the figure benchmarks are
+deterministic and fast).  alpha_i is the per-layer output size — the exact
+quantity that crosses the edge->cloud uplink.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LayerCost, measure_layer_times
+from repro.models.alexnet import BAlexNetConfig, init_b_alexnet, layer_fns
+
+CACHE = Path(__file__).resolve().parent.parent / "results" / "alexnet_profile.json"
+
+#: Raw 224x224x3 fp32 image — the paper's alpha_0 (cloud-only upload).
+RAW_INPUT_BYTES = 224 * 224 * 3 * 4
+
+
+def profile(batch: int = 1, force: bool = False) -> list[LayerCost]:
+    if CACHE.exists() and not force:
+        data = json.loads(CACHE.read_text())
+        return [LayerCost(**row) for row in data]
+    params = init_b_alexnet(jax.random.PRNGKey(0))
+    fns = layer_fns(params)
+    # Chain the abstract inputs through the layers.
+    x = jnp.zeros((batch, 224, 224, 3), jnp.float32)
+    inputs = []
+    for name, fn in fns:
+        inputs.append(x)
+        x = jax.eval_shape(fn, x)
+        x = jnp.zeros(x.shape, x.dtype)
+    costs = measure_layer_times(fns, inputs, iters=20, warmup=3)
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    CACHE.write_text(json.dumps([c.__dict__ for c in costs]))
+    return costs

@@ -1,0 +1,127 @@
+"""Paper Fig. 6: P[classified at side branch] vs entropy threshold under
+three Gaussian-blur distortion levels (kernel sizes 5 / 15 / 65, as in the
+paper), on B-AlexNet.
+
+The paper trains on a cat-vs-dog dataset; offline here, we train on a
+synthetic two-class image task (class-dependent oriented textures) — the
+figure's *claim* is dataset-independent: heavier blur -> flatter branch
+posterior -> higher entropy -> lower exit probability at any threshold.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import threshold_sweep
+from repro.core.calibration import normalized_entropy
+from repro.models.alexnet import forward, init_b_alexnet
+
+KERNELS = {"low": 5, "mid": 15, "high": 65}
+THRESHOLDS = np.linspace(0.05, 1.0, 20)
+
+
+def make_images(key, n: int, size: int = 224):
+    """Two-class oriented-texture 'animals'."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.bernoulli(k1, 0.5, (n,)).astype(jnp.int32)
+    xs = jnp.linspace(0, 8 * np.pi, size)
+    horiz = jnp.sin(xs)[None, :, None]  # varies along width
+    vert = jnp.sin(xs)[:, None, None]  # varies along height
+    phase = jax.random.uniform(k3, (n, 1, 1, 1)) * 2 * np.pi
+    base = jnp.where(
+        labels[:, None, None, None] == 0,
+        jnp.sin(xs[None, None, :, None] + phase),
+        jnp.sin(xs[None, :, None, None] + phase),
+    )
+    img = jnp.broadcast_to(base, (n, size, size, 1))
+    img = jnp.concatenate([img] * 3, axis=-1)
+    noise = jax.random.normal(k2, img.shape) * 0.3
+    return (img + noise).astype(jnp.float32), labels
+
+
+def gaussian_blur(img, ksize: int):
+    """Separable Gaussian blur, sigma = ksize/6 (matches paper's kernels)."""
+    sigma = max(ksize / 6.0, 1e-3)
+    xs = jnp.arange(ksize, dtype=jnp.float32) - (ksize - 1) / 2
+    kern = jnp.exp(-0.5 * (xs / sigma) ** 2)
+    kern = kern / kern.sum()
+
+    # Separable blur: shifted-add along H then W (edge padding).
+    def blur_axis(x, axis):
+        pad = [(0, 0)] * x.ndim
+        half = ksize // 2
+        pad[axis] = (half, ksize - 1 - half)
+        xp = jnp.pad(x, pad, mode="edge")
+        idx = [slice(None)] * x.ndim
+        out = jnp.zeros_like(x)
+        for i in range(ksize):
+            idx[axis] = slice(i, i + x.shape[axis])
+            out = out + kern[i] * xp[tuple(idx)]
+        return out
+
+    return blur_axis(blur_axis(img, 1), 2)
+
+
+def train_b_alexnet(key, steps: int = 30, batch: int = 16, lr: float = 3e-4):
+    params = init_b_alexnet(key)
+
+    def loss_fn(p, img, lab):
+        main, branch = forward(p, img)
+        onehot = jax.nn.one_hot(lab, 2)
+        lm = -jnp.mean(jnp.sum(jax.nn.log_softmax(main) * onehot, -1))
+        lb = -jnp.mean(jnp.sum(jax.nn.log_softmax(branch) * onehot, -1))
+        return lm + 0.5 * lb
+
+    @jax.jit
+    def step(p, img, lab):
+        l, g = jax.value_and_grad(loss_fn)(p, img, lab)
+        p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+        return p, l
+
+    for i in range(steps):
+        img, lab = make_images(jax.random.fold_in(key, i), batch)
+        params, l = step(params, img, lab)
+    return params, float(l)
+
+
+def run(n_eval: int = 48) -> list[str]:
+    """n_eval=48 matches the paper's 48-sample batch."""
+    t0 = time.perf_counter()
+    key = jax.random.PRNGKey(7)
+    params, final_loss = train_b_alexnet(key)
+    img, lab = make_images(jax.random.fold_in(key, 999), n_eval)
+
+    fwd = jax.jit(lambda p, x: forward(p, x))
+    curves = {}
+    accs = {}
+    for name, ksize in KERNELS.items():
+        blurred = gaussian_blur(img, ksize)
+        main, branch = fwd(params, blurred)
+        ents = np.asarray(normalized_entropy(branch))[None, :]  # (K=1, B)
+        curves[name] = threshold_sweep(ents, THRESHOLDS)[:, 0]
+        accs[name] = float((np.argmax(np.asarray(main), -1) == np.asarray(lab)).mean())
+    dt = (time.perf_counter() - t0) * 1e6
+
+    # Claim: at every threshold, heavier distortion -> lower exit probability
+    # (checked in aggregate: mean over thresholds strictly ordered).
+    m_low, m_mid, m_high = (curves[k].mean() for k in ("low", "mid", "high"))
+    ordered = bool(m_low >= m_mid >= m_high)
+    mono = all(bool(np.all(np.diff(c) >= -1e-12)) for c in curves.values())
+    rows = [
+        f"fig6/train+sweep,{dt:.0f},loss={final_loss:.3f};acc_low={accs['low']:.2f}",
+        (
+            f"fig6/claims,0.0,exit_prob_low>=mid>=high={ordered};"
+            f"monotone_in_threshold={mono};"
+            f"mean_exit_low={m_low:.3f};mid={m_mid:.3f};high={m_high:.3f}"
+        ),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: wall-clock of the jnp reference paths (what the
+CPU host actually executes) + interpret-mode correctness spot checks.
+
+On TPU the Pallas kernels replace the jnp paths; here the jnp oracle IS the
+executable implementation, so its timing is what the serving engine sees.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20, warmup=3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # Entropy-exit over a Qwen3-sized vocab (the per-branch confidence test).
+    logits = jax.random.normal(key, (64, 151_936), jnp.float32)
+    f = jax.jit(lambda x: ref.entropy_exit_ref(x, 0.5))
+    rows.append(f"kernel/entropy_exit_b64_v152k,{_time(f, logits):.1f},jnp_ref")
+
+    # Flash-decode against a 32k cache (decode_32k per-layer shape).
+    q = jax.random.normal(key, (8, 32, 128), jnp.bfloat16)
+    k = jax.random.normal(key, (8, 32_768, 8, 128), jnp.bfloat16)
+    v = jax.random.normal(key, (8, 32_768, 8, 128), jnp.bfloat16)
+    pos = jnp.arange(32_768, dtype=jnp.int32)
+    qpos = jnp.asarray(32_768, jnp.int32)
+    f = jax.jit(lambda *a: ref.flash_decode_ref(*a))
+    rows.append(
+        f"kernel/flash_decode_b8_c32k,{_time(f, q, k, v, pos, qpos):.1f},jnp_ref"
+    )
+
+    # SSD scan, mamba2-130m block shape, 4k tokens.
+    from repro.models.mamba import ssd_chunked
+
+    x = jax.random.normal(key, (2, 4096, 24, 64), jnp.float32) * 0.5
+    a = -jnp.abs(jax.random.normal(key, (2, 4096, 24))) * 0.3
+    bm = jax.random.normal(key, (2, 4096, 24, 128)) * 0.5
+    cm = jax.random.normal(key, (2, 4096, 24, 128)) * 0.5
+    f = jax.jit(lambda *args: ssd_chunked(*args, chunk=64))
+    rows.append(f"kernel/ssd_chunked_4k,{_time(f, x, a, bm, cm, iters=5):.1f},jnp_chunked")
+
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Three terms per (arch x shape) on the single-pod mesh, seconds per step:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs        (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_chip / HBM_bw            (819 GB/s)
+    collective = collective_bytes_per_chip / link_bw    (~50 GB/s/link ICI)
+
+``cost_analysis()`` on the SPMD-partitioned module is already per-chip;
+collective bytes come from parsing the optimized HLO (launch/dryrun.py).
+
+MODEL_FLOPS uses 6*N*D for training (fwd+bwd) and 2*N*D for inference
+steps, with N = active params (MoE: top-k + shared) and D = tokens
+processed per step.  The ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat/dispatch/attention overhead (attention FLOPs are extra real work, so
+the ratio is a *lower bound* on usefulness).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.active_params()
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * tokens
+
+
+def load_records(mesh: str = "pod16x16", tag: str = "") -> list[dict]:
+    out = []
+    suffix = f"__{tag}" if tag else ""
+    for p in sorted(RESULTS.glob(f"*__{mesh}{suffix}.json")):
+        rec = json.loads(p.read_text())
+        if tag == "" and rec.get("tag"):
+            continue
+        out.append(rec)
+    return out
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = CHIPS[rec["mesh"]]
+    cost = rec["cost"]
+    colls = rec["collectives"]
+    coll_bytes = sum(v for k, v in colls.items() if k != "_counts")
+    # Prefer the trip-count-corrected totals (launch/hlo_analysis.py);
+    # XLA cost_analysis counts while-loop bodies once and is kept only as
+    # a fallback for records produced before the correction.
+    flops = rec.get("dot_flops") or cost["flops"]
+    bytes_acc = rec.get("hbm_bytes") or cost["bytes_accessed"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    ratio = mf / flops if flops else 0.0
+    bound = max(terms.values())
+    mfu_bound = (mf / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": flops,
+        "uncorrected_cost_flops": cost["flops"],
+        "useful_ratio": ratio,
+        "mfu_upper_bound": mfu_bound,
+        "peak_gb_per_dev": rec["memory"]["peak_bytes_est"] / 1e9,
+    }
+
+
+_SUGGESTIONS = {
+    "compute": "reduce redundant FLOPs (dispatch einsums, causal-block "
+    "skipping in flash attention, remat policy)",
+    "memory": "raise arithmetic intensity (fuse norms/rope, bigger per-chip "
+    "batch, bf16 residuals, windowed cache)",
+    "collective": "reshard to cut gathers (kv-head vs head-dim sharding, "
+    "FSDP prefetch, overlap collectives with compute)",
+}
+
+
+def table(mesh: str = "pod16x16", tag: str = "") -> str:
+    rows = [analyze(r) for r in load_records(mesh, tag)]
+    rows = [r for r in rows if r]
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+        f"{'collect':>10s} {'dom':>9s} {'useful':>7s} {'MFU<=':>6s} {'GB/dev':>7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} "
+            f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+            f"{r['t_collective_s']:10.4f} {r['dominant']:>9s} "
+            f"{r['useful_ratio']:7.3f} {r['mfu_upper_bound']:6.2f} "
+            f"{r['peak_gb_per_dev']:7.2f}"
+        )
+    return "\n".join(lines)
+
+
+def csv_rows(mesh: str = "pod16x16") -> list[str]:
+    """benchmarks/run.py contract: name,us_per_call,derived."""
+    out = []
+    for r in load_records(mesh):
+        a = analyze(r)
+        if not a:
+            continue
+        step_s = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+        out.append(
+            f"roofline/{a['arch']}/{a['shape']},{step_s * 1e6:.1f},"
+            f"dom={a['dominant']};useful={a['useful_ratio']:.3f};"
+            f"gb={a['peak_gb_per_dev']:.2f}"
+        )
+    return out
+
+
+def main() -> None:
+    print(table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end driver (deliverable b): serve a small BranchyNet LM with
+batched requests across a simulated edge/cloud split, re-optimizing the
+partition as network conditions change.
+
+This is the paper's deployment story: the cost model + Dijkstra run in the
+control plane at admission time and whenever bandwidth drifts; the data
+plane executes the currently-installed split.
+
+Run:  PYTHONPATH=src python examples/serve_partitioned.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import LayerCost, Partitioner, build_cost_profile
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+from repro.serving.partitioned import PartitionedServer
+
+BATCH = 16
+PROMPT = 24
+CONTEXT = 256
+DECODE_STEPS = 16
+
+#: Bandwidth schedule the "deployment" experiences (bits/s).
+NETWORK_SCHEDULE = [
+    ("wifi", 18.8e6),
+    ("4g", 5.85e6),
+    ("degraded-3g", 0.4e6),
+]
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    cfg = get_smoke_config("qwen3_8b")
+    params = M.init_params(key, cfg)
+    n = cfg.num_layers
+    print(f"serving {cfg.name} (reduced): {n} layers, branches {cfg.branch_layers}")
+
+    # ---- calibration pass on the unpartitioned engine.
+    engine = ServingEngine(cfg, params, context_len=CONTEXT)
+    prompts = {
+        "tokens": jax.random.randint(key, (BATCH, PROMPT), 0, cfg.vocab_size)
+    }
+    state = engine.start(prompts)
+    _, stats = engine.decode(state, steps=8)
+    p_k = stats.conditional_probs()
+    print(f"calibrated p_k = {np.round(p_k, 3)} "
+          f"(fractions {np.round(stats.exit_fractions(), 3)})")
+
+    # ---- measured per-layer costs (uniform stub; a real deployment uses
+    # core.profiler.measure_layer_times on the edge and cloud tiers).
+    costs = [LayerCost(f"block{i}", 0, 0, cfg.d_model * 2.0, 1.5e-3)
+             for i in range(1, n + 1)]
+
+    for net_name, bw in NETWORK_SCHEDULE:
+        profile = build_cost_profile(
+            costs, cfg.branch_layers, p_k,
+            network=__import__("repro.core.types", fromlist=["NetworkProfile"])
+            .NetworkProfile(net_name, bw),
+            gamma=25.0, raw_input_bytes=PROMPT * 4.0,
+        )
+        plan = Partitioner(profile).solve()
+        print(f"\n== network {net_name} ({bw / 1e6:.2f} Mbps) -> {plan.describe()}")
+
+        srv = PartitionedServer(cfg, params, plan.split_layer, cost_profile=profile)
+        caches = M.init_caches(cfg, BATCH, CONTEXT)
+        tok = jnp.zeros((BATCH, 1), jnp.int32)
+        shipped = 0
+        edge_exits = 0
+        t0 = time.perf_counter()
+        for i in range(DECODE_STEPS):
+            rep, caches = srv.step(tok, PROMPT + i, caches)
+            tok = jnp.asarray(rep.tokens[:, None])
+            shipped += rep.shipped
+            edge_exits += int(rep.exited_on_edge.sum())
+        dt = time.perf_counter() - t0
+        total = BATCH * DECODE_STEPS
+        print(
+            f"   decoded {total} token-steps in {dt:.2f}s: "
+            f"{edge_exits} exited on edge, {shipped} crossed the cut "
+            f"({(1 - shipped / total) * 100:.0f}% transfer saved), "
+            f"model-estimated E[T]={0.0 if rep.est_latency_s is None else rep.est_latency_s * 1e3:.2f} ms/sample"
+        )
+
+
+if __name__ == "__main__":
+    main()

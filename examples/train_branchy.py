@@ -1,0 +1,76 @@
+"""Train a small BranchyNet LM for a few hundred steps on the synthetic
+pipeline (deliverable b): joint main+branch loss (BranchyNet training),
+AdamW + cosine schedule, checkpointing, and a final calibration report
+showing the trained branches actually exit.
+
+Run:  PYTHONPATH=src python examples/train_branchy.py [--steps 300]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import cosine_schedule, make_optimizer
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/branchy_ckpt.npz")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("olmo_1b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    print(f"training {cfg.name} (reduced, {n_params/1e6:.1f}M params), "
+          f"branches after {cfg.branch_layers}")
+
+    opt = make_optimizer(
+        "adamw", lr=cosine_schedule(3e-3, warmup=20, total=args.steps)
+    )
+    state = init_train_state(params, opt)
+    train_step = jax.jit(make_train_step(cfg, opt))
+
+    data = iter(SyntheticLM(cfg, args.batch, args.seq))
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, metrics = train_step(state, batch)
+        if step % 25 == 0 or step == args.steps - 1:
+            bl = {k: float(v) for k, v in metrics.get("branch_losses", {}).items()} \
+                if "branch_losses" in metrics else {}
+            print(
+                f"step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                f"main {float(metrics.get('main_loss', metrics['loss'])):.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.2f}"
+            )
+    dt = time.perf_counter() - t0
+    print(f"{args.steps} steps in {dt:.1f}s ({args.steps / dt:.1f} steps/s)")
+
+    save_checkpoint(args.ckpt, state["params"], step=args.steps)
+    restored = restore_checkpoint(args.ckpt, jax.eval_shape(lambda: state["params"]))
+    print(f"checkpoint round-trip OK -> {args.ckpt}")
+
+    # Trained-branch calibration: exits should now actually fire.
+    engine = ServingEngine(cfg, restored, context_len=args.seq + 32)
+    batch = {k: jnp.asarray(v) for k, v in next(data).items() if k == "tokens"}
+    stateS = engine.start({"tokens": batch["tokens"][:, : args.seq // 2]})
+    _, stats = engine.decode(stateS, steps=16)
+    print(f"post-training exit fractions (branches..., final): "
+          f"{np.round(stats.exit_fractions(), 3)}")
+    print(f"conditional p_k = {np.round(stats.conditional_probs(), 3)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Phi-3-medium 14B [arXiv:2404.14219] — dense, GQA kv=10."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    arch_type="dense",
+    source="arXiv:2404.14219",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=10,
+    head_dim=128,
+    d_ff=17920,
+    vocab_size=100352,
+    branch_layers=(10, 20, 30),
+    fsdp=True,
+    grad_accum=8,
+    decode_qhd_shard=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=512,
+        vocab_size=512,
+        branch_layers=(1,),
+        remat=False,
+    )

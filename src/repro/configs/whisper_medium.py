@@ -1,0 +1,44 @@
+"""Whisper-medium [arXiv:2212.04356] — enc-dec; conv/mel frontend stubbed
+(input_specs provides post-conv frame embeddings, per the spec carve-out).
+Norms are RMSNorm in place of Whisper's LayerNorm (DESIGN.md adaptation)."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    arch_type="audio",
+    source="arXiv:2212.04356",
+    num_layers=24,  # decoder
+    num_encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    mlp_type="gelu",
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    encoder_seq_len=1500,
+    frontend="audio",
+    branch_layers=(6, 12, 18),
+    grad_accum=8,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        num_encoder_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        encoder_seq_len=32,
+        branch_layers=(1,),
+        remat=False,
+    )

@@ -1,0 +1,87 @@
+"""The paper's contribution: BranchyNet partitioning as shortest path.
+
+Public API:
+
+    from repro.core import (
+        BranchSpec, CostProfile, NetworkProfile, PartitionPlan, UPLINK_PRESETS,
+        Partitioner, build_cost_profile,
+        expected_time, expected_time_all_splits,
+        build_partition_graph, dijkstra, shortest_path_plan, brute_force_split,
+        solve_chain_jax, chain_costs_jax,
+        normalized_entropy, calibrate_exit_probs, threshold_sweep,
+        analyze_layer_costs, measure_layer_times, HardwareSpec, TPU_V5E,
+    )
+"""
+
+from repro.core.calibration import (
+    CalibrationResult,
+    calibrate_exit_probs,
+    exit_mask,
+    normalized_entropy,
+    threshold_sweep,
+)
+from repro.core.dag import DagCostModel, DagNode, chain_as_dag, min_cut_partition
+from repro.core.graph import Graph, build_partition_graph
+from repro.core.multitier import MultiTierPlan, TierSpec, solve_multitier
+from repro.core.latency import expected_time, expected_time_all_splits, plan_from_split
+from repro.core.partitioner import Partitioner, build_cost_profile
+from repro.core.profiler import (
+    TPU_V5E,
+    HardwareSpec,
+    LayerCost,
+    analyze_layer_costs,
+    measure_layer_times,
+    output_bytes,
+)
+from repro.core.shortest_path import (
+    brute_force_split,
+    chain_costs_jax,
+    dijkstra,
+    shortest_path_plan,
+    solve_chain_jax,
+)
+from repro.core.types import (
+    UPLINK_PRESETS,
+    BranchSpec,
+    CostProfile,
+    NetworkProfile,
+    PartitionPlan,
+)
+
+__all__ = [
+    "BranchSpec",
+    "CostProfile",
+    "NetworkProfile",
+    "PartitionPlan",
+    "UPLINK_PRESETS",
+    "Partitioner",
+    "build_cost_profile",
+    "expected_time",
+    "expected_time_all_splits",
+    "plan_from_split",
+    "Graph",
+    "build_partition_graph",
+    "DagCostModel",
+    "DagNode",
+    "chain_as_dag",
+    "min_cut_partition",
+    "TierSpec",
+    "MultiTierPlan",
+    "solve_multitier",
+    "dijkstra",
+    "shortest_path_plan",
+    "brute_force_split",
+    "solve_chain_jax",
+    "chain_costs_jax",
+    "CalibrationResult",
+    "normalized_entropy",
+    "exit_mask",
+    "calibrate_exit_probs",
+    "threshold_sweep",
+    "HardwareSpec",
+    "TPU_V5E",
+    "LayerCost",
+    "analyze_layer_costs",
+    "measure_layer_times",
+    "output_bytes",
+]

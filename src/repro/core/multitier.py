@@ -1,0 +1,138 @@
+"""K-tier partitioning (beyond-paper, DESIGN.md Sec. 7).
+
+The paper splits across two tiers (edge, cloud).  Real fleets have more:
+end device -> edge server -> regional cloud -> core cloud, with a bandwidth
+cliff at every hop.  The same shortest-path insight generalizes: execution
+is monotone through tiers (layers only move forward), so the optimal
+assignment is a monotone non-decreasing map layer->tier, i.e. a path in a
+layered (layer x tier) lattice:
+
+    state (i, k): layers 1..i done, currently on tier k
+    stay:  (i, k) -> (i+1, k)   cost surv(i) * t_{i+1}^k
+    hop:   (i, k) -> (i, k+1)   cost surv(i) * alpha_i / B_k
+    exits: side branches scale everything downstream by (1 - p_b), exactly
+           as in the 2-tier model (evaluated on whichever tier holds them).
+
+Solved by DP over the lattice (topological order), O(N * K).
+With K == 2 this reduces to the paper's problem; tests assert agreement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.types import CostProfile
+
+__all__ = ["TierSpec", "MultiTierPlan", "solve_multitier"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One tier: per-layer compute times and uplink bandwidth to the NEXT
+    tier (bits/s; last tier's uplink is unused)."""
+
+    name: str
+    gamma: float  # t_i at this tier = gamma * t_c (paper's convention)
+    uplink_bps: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTierPlan:
+    cut_after: tuple[int, ...]  # layer after which each hop happens (K-1,)
+    expected_time_s: float
+    tier_of_layer: tuple[int, ...]  # (N,) tier index per layer
+
+
+def solve_multitier(
+    t_c: np.ndarray,  # (N+1,) cloud-reference per-layer times, [0] == 0
+    alpha: np.ndarray,  # (N+1,) output bytes, [0] == raw input
+    branch_probs: np.ndarray,  # (N+1,) conditional exit prob per layer
+    tiers: list[TierSpec],
+) -> MultiTierPlan:
+    t_c = np.asarray(t_c, float)
+    alpha = np.asarray(alpha, float)
+    p = np.asarray(branch_probs, float)
+    n = len(t_c) - 1
+    k = len(tiers)
+    assert k >= 1
+
+    surv = np.cumprod(1.0 - p)  # surv[i] = alive after layer i's branch
+    reach = np.concatenate([[1.0], surv[:-1]])  # alive entering layer i
+
+    # Branch semantics (paper Sec. IV-B): side branches run on every tier
+    # EXCEPT the last (the cloud evaluates none), and the branch sitting
+    # exactly at a cut is discarded (Fig. 2(c)).  So on tiers 0..K-2 the
+    # survival bookkeeping is the global reach[] array, and the last tier's
+    # whole tail is frozen at the survival of the final hop.  (For K >= 3
+    # this treats a branch at an *intermediate* hop as evaluated by the
+    # next branchy tier — exact whenever no branch sits exactly at a cut.)
+    last = k - 1
+    # dist[i][j]: layers 1..i done on branchy tiers, currently on tier j<last.
+    dist = np.full((n + 1, max(last, 1)), np.inf)
+    parent = np.full((n + 1, max(last, 1), 2), -1, dtype=int)
+    dist[0][0] = 0.0
+    for j in range(1, last):
+        cand = dist[0][j - 1] + alpha[0] * 8.0 / tiers[j - 1].uplink_bps
+        if cand < dist[0][j]:
+            dist[0][j] = cand
+            parent[0][j] = (0, j - 1)
+    for i in range(1, n + 1):
+        for j in range(last):
+            cand = dist[i - 1][j] + reach[i] * tiers[j].gamma * t_c[i]
+            if cand < dist[i][j]:
+                dist[i][j] = cand
+                parent[i][j] = (i - 1, j)
+        for j in range(1, last):
+            cand = dist[i][j - 1] + reach[i] * alpha[i] * 8.0 / tiers[j - 1].uplink_bps
+            if cand < dist[i][j]:
+                dist[i][j] = cand
+                parent[i][j] = (i, j - 1)
+
+    # Closed-form frozen tail on the last tier (no branches there).
+    tail = np.concatenate([np.cumsum(t_c[::-1])[::-1][1:], [0.0]])
+    best_cost, best_i, end_on_last = np.inf, n, False
+    if last >= 1:
+        for j in range(last):
+            if dist[n][j] < best_cost:  # finish without reaching the cloud
+                best_cost, best_i, end_on_last = float(dist[n][j]), n, False
+                best_j_final = j
+        for i in range(0, n + 1):
+            hop = dist[i][last - 1] + reach[i] * (
+                alpha[i] * 8.0 / tiers[last - 1].uplink_bps
+                + tiers[last].gamma * tail[i]
+            )
+            if hop < best_cost:
+                best_cost, best_i, end_on_last = float(hop), i, True
+                best_j_final = last - 1
+    else:  # single tier: everything runs there
+        best_cost = float(np.sum(reach[1:] * tiers[0].gamma * t_c[1:]))
+        best_i, end_on_last, best_j_final = n, False, 0
+
+    # Backtrack the branchy-tier assignment up to best_i.
+    tier_of_layer = [last] * (n + 1)
+    i, j = best_i, best_j_final
+    while i > 0 or j > 0:
+        pi, pj = parent[i][j]
+        if pi < 0:
+            break
+        if pi == i - 1 and pj == j:
+            tier_of_layer[i] = j
+        i, j = int(pi), int(pj)
+    cuts = []
+    for j in range(1, k):
+        after = max([i for i in range(1, n + 1) if tier_of_layer[i] < j],
+                    default=0)
+        cuts.append(after)
+    return MultiTierPlan(
+        cut_after=tuple(cuts),
+        expected_time_s=best_cost,
+        tier_of_layer=tuple(tier_of_layer[1:]),
+    )
+
+
+def from_cost_profile(profile: CostProfile, tiers: list[TierSpec]) -> MultiTierPlan:
+    return solve_multitier(
+        profile.t_c, profile.alpha, profile.branch_exit_probs(), tiers
+    )

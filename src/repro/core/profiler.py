@@ -1,0 +1,131 @@
+"""Per-layer cost extraction: the partitioner's ``t_c`` / ``alpha`` inputs.
+
+The paper measures ``t_i^c`` on Google Colab (K80) and sets
+``t_i^e = gamma * t_i^c``.  We support two sources:
+
+  * :func:`measure_layer_times` — wall-clock each layer callable on the local
+    CPU device (paper-faithful for the B-AlexNet reproduction);
+  * :func:`analyze_layer_costs` — derive roofline times from the compiled
+    HLO of each layer (``cost_analysis()``): t = max(flops/peak, bytes/bw).
+    This is the deployable path — no hardware in the loop (DESIGN.md Sec. 7).
+
+Both return a :class:`repro.core.types.CostProfile`-ready pair of arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "HardwareSpec",
+    "TPU_V5E",
+    "LayerCost",
+    "analyze_layer_costs",
+    "measure_layer_times",
+    "output_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants for one accelerator tier."""
+
+    name: str
+    peak_flops: float  # FLOP/s (bf16 unless noted)
+    hbm_bw: float  # bytes/s
+    link_bw: float = 50e9  # bytes/s per ICI link
+    hbm_bytes: float = 16e9
+
+    def roofline_time(self, flops: float, bytes_: float) -> float:
+        """Execution time lower bound: max of compute and memory terms."""
+        return max(flops / self.peak_flops, bytes_ / self.hbm_bw)
+
+
+#: The target accelerator for this framework (system prompt constants).
+TPU_V5E = HardwareSpec("tpu-v5e", peak_flops=197e12, hbm_bw=819e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    name: str
+    flops: float
+    bytes_accessed: float
+    output_bytes: float
+    time_s: float
+
+
+def output_bytes(tree) -> float:
+    """Total bytes of a pytree of abstract/concrete arrays (the paper's
+    alpha_i for the tensor that crosses the cut)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0.0
+    for leaf in leaves:
+        total += float(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _cost_analysis(fn: Callable, *abstract_args) -> dict:
+    lowered = jax.jit(fn).lower(*abstract_args)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0]
+    return ca or {}
+
+
+def analyze_layer_costs(
+    layer_fns: Sequence[tuple[str, Callable]],
+    layer_inputs: Sequence,
+    hardware: HardwareSpec = TPU_V5E,
+) -> list[LayerCost]:
+    """Roofline-cost every layer of a chain from its compiled HLO.
+
+    ``layer_fns[i]`` maps layer i's input pytree to its output pytree;
+    ``layer_inputs[i]`` is a pytree of ShapeDtypeStructs.  No device memory
+    is allocated.
+    """
+    out: list[LayerCost] = []
+    for (name, fn), args in zip(layer_fns, layer_inputs):
+        ca = _cost_analysis(fn, args)
+        flops = float(ca.get("flops", 0.0))
+        bytes_accessed = float(ca.get("bytes accessed", 0.0))
+        shape = jax.eval_shape(fn, args)
+        ob = output_bytes(shape)
+        t = hardware.roofline_time(flops, max(bytes_accessed, ob))
+        out.append(LayerCost(name, flops, bytes_accessed, ob, t))
+    return out
+
+
+def measure_layer_times(
+    layer_fns: Sequence[tuple[str, Callable]],
+    layer_inputs: Sequence,
+    iters: int = 10,
+    warmup: int = 2,
+) -> list[LayerCost]:
+    """Wall-clock per-layer timing on the local device (paper Sec. VI mode).
+
+    ``layer_inputs`` here are concrete arrays.  Used by the B-AlexNet
+    reproduction where the paper measured Colab times; everything is jitted
+    and block_until_ready'd so we time steady-state compute only.
+    """
+    out: list[LayerCost] = []
+    for (name, fn), args in zip(layer_fns, layer_inputs):
+        jf = jax.jit(fn)
+        res = jf(args)
+        jax.block_until_ready(res)
+        for _ in range(warmup):
+            jax.block_until_ready(jf(args))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            res = jf(args)
+        jax.block_until_ready(res)
+        dt = (time.perf_counter() - t0) / iters
+        ob = output_bytes(jax.eval_shape(fn, args))
+        out.append(LayerCost(name, 0.0, 0.0, ob, dt))
+    return out

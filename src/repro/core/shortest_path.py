@@ -1,0 +1,139 @@
+"""Shortest-path solvers for BranchyNet partitioning (paper Sec. V).
+
+Three interchangeable solvers, cross-checked in tests:
+
+  * :func:`dijkstra` — the paper's solver, run on the explicit ``G'_BDNN``
+    graph.  O(m + n log n) with a binary heap; control-plane (pure Python).
+  * :func:`brute_force_split` — evaluates Eq. 5/6 at every split; the oracle.
+  * :func:`solve_chain_jax` — JAX closed form of the chain shortest path,
+    jit/vmap-able over (bandwidth, gamma, p) grids; this is what the Fig. 4/5
+    sensitivity sweeps use (a whole figure is one ``vmap``).  Beyond-paper:
+    the paper runs Dijkstra once per parameter point.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, build_partition_graph, split_of_path
+from repro.core.latency import expected_time_all_splits, plan_from_split
+from repro.core.types import CostProfile, PartitionPlan
+
+__all__ = [
+    "dijkstra",
+    "shortest_path_plan",
+    "brute_force_split",
+    "solve_chain_jax",
+    "chain_costs_jax",
+]
+
+
+def dijkstra(
+    graph: Graph, source: str = "input", target: str = "output"
+) -> tuple[float, list[str]]:
+    """Textbook Dijkstra with a lazy-deletion heap.  Returns (dist, path)."""
+    if source not in graph.adj or target not in graph.adj:
+        raise KeyError("source/target not in graph")
+    dist: dict[str, float] = {source: 0.0}
+    prev: dict[str, str] = {}
+    done: set[str] = set()
+    heap: list[tuple[float, str]] = [(0.0, source)]
+    while heap:
+        d, u = heapq.heappop(heap)
+        if u in done:
+            continue
+        done.add(u)
+        if u == target:
+            break
+        for v, w in graph.adj[u]:
+            nd = d + w
+            if nd < dist.get(v, float("inf")):
+                dist[v] = nd
+                prev[v] = u
+                heapq.heappush(heap, (nd, v))
+    if target not in dist:
+        raise ValueError("target unreachable")
+    path = [target]
+    while path[-1] != source:
+        path.append(prev[path[-1]])
+    path.reverse()
+    return dist[target], path
+
+
+def shortest_path_plan(profile: CostProfile) -> PartitionPlan:
+    """Paper's method end to end: build G'_BDNN, run Dijkstra, decode s."""
+    g = build_partition_graph(profile)
+    cost, path = dijkstra(g)
+    s = split_of_path(path)
+    plan = plan_from_split(profile, s, method="dijkstra")
+    # The graph cost should equal the closed form up to the epsilon link.
+    assert abs(cost - plan.expected_time_s) < 1e-6 + 1e-9 * abs(cost), (
+        f"graph/closed-form divergence: {cost} vs {plan.expected_time_s}"
+    )
+    return plan
+
+
+def brute_force_split(profile: CostProfile) -> PartitionPlan:
+    """Oracle: argmin over all N+1 splits of the closed-form E[T]."""
+    costs = expected_time_all_splits(profile)
+    s = int(np.argmin(costs))
+    return plan_from_split(profile, s, method="brute_force")
+
+
+# ---------------------------------------------------------------------------
+# JAX closed-form solver (vectorized sensitivity sweeps)
+# ---------------------------------------------------------------------------
+
+
+def chain_costs_jax(
+    t_c: jax.Array,  # (N+1,)  cloud per-layer seconds, [0] == 0
+    alpha: jax.Array,  # (N+1,)  output bytes per layer, [0] == raw input
+    p: jax.Array,  # (N+1,)  conditional exit prob per layer (0 = no branch)
+    gamma: jax.Array,  # scalar edge slowdown
+    bandwidth_bps: jax.Array,  # scalar
+    branch_t_c: jax.Array | None = None,  # (N+1,) branch head cloud seconds
+) -> jax.Array:
+    """E[T_inf(s)] for all splits s=0..N; differentiable w.r.t. everything.
+
+    Mirrors latency.expected_time_all_splits in jnp.  The cumulative products
+    / sums are the ``lax``-level scan form of Bellman-Ford on the chain DAG:
+    dist[s] = dist[s-1] + w_e[s], relaxed once per vertex in topological
+    order, which is all a DAG needs.
+    """
+    t_net = alpha * 8.0 / bandwidth_bps
+    t_e = gamma * t_c
+    surv = jnp.cumprod(1.0 - p)  # surv[i] = alive after v_i's branch
+    reach = jnp.concatenate([jnp.ones((1,), surv.dtype), surv[:-1]])
+
+    w_e = t_e * reach
+    if branch_t_c is not None:
+        # Branch head at layer k is paid by splits s >= k+1 (Fig. 2(c)).
+        w_b = gamma * branch_t_c * reach
+        w_e = w_e + jnp.concatenate([jnp.zeros((1,), w_b.dtype), w_b[:-1]])
+    cum_edge = jnp.cumsum(w_e)
+
+    tail_cloud = jnp.concatenate(
+        [jnp.cumsum(t_c[::-1])[::-1][1:], jnp.zeros((1,), t_c.dtype)]
+    )
+    surv_at_cut = reach  # branch at the cut is not evaluated
+    cost = cum_edge + surv_at_cut * (t_net + tail_cloud)
+    n = t_c.shape[0] - 1
+    return cost.at[n].set(cum_edge[n])
+
+
+@jax.jit
+def solve_chain_jax(
+    t_c: jax.Array,
+    alpha: jax.Array,
+    p: jax.Array,
+    gamma: jax.Array,
+    bandwidth_bps: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """(optimal split s*, E[T(s*)]).  vmap over any argument for sweeps."""
+    costs = chain_costs_jax(t_c, alpha, p, gamma, bandwidth_bps)
+    s = jnp.argmin(costs)
+    return s, costs[s]

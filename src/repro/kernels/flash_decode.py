@@ -1,0 +1,135 @@
+"""Single-token GQA decode attention Pallas TPU kernel (flash-decode).
+
+The decode hot loop attends one query against a (ring) KV cache of up to
+512k slots.  This kernel streams the cache through VMEM in ``block_c``-slot
+tiles with the online-softmax accumulator, fusing slot-validity and
+sliding-window masking (the paper's long-context serving path).
+
+Layout: q (B, H, D) grouped as (B, K, G, D); cache (B, C, K, D).
+Grid: (B, K, C_tiles) — the cache dim is the sequential inner loop; each
+(batch, kv-head) pair owns its accumulator scratch.  Tiles are
+(block_c, D) with D padded to the 128 lane width by the wrapper; the
+score matmul (G x D) @ (D x block_c) runs on the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, 1, G, D)
+    k_ref,  # (1, block_c, 1, D)
+    v_ref,  # (1, block_c, 1, D)
+    pos_ref,  # (block_c,)  int32 slot positions
+    qpos_ref,  # (1, 1) SMEM: query position
+    o_ref,  # (1, 1, G, D) out
+    m_scr,  # (G,) scratch
+    l_scr,  # (G,)
+    acc_scr,  # (G, D)
+    *,
+    num_c_blocks: int,
+    window: int,
+    scale: float,
+):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (bc, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (bc, D)
+    kpos = pos_ref[...]  # (bc,)
+    qpos = qpos_ref[0, 0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, bc)
+    valid = (kpos >= 0) & (kpos <= qpos)
+    if window > 0:
+        valid &= qpos - kpos < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_old = m_scr[...]
+    m_new = jnp.maximum(m_old, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_old - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(c == num_c_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_c", "interpret")
+)
+def flash_decode_pallas(
+    q: jax.Array,  # (B, H, D)
+    k: jax.Array,  # (B, C, K, D)
+    v: jax.Array,  # (B, C, K, D)
+    k_pos: jax.Array,  # (C,) int32
+    q_pos: jax.Array,  # () int32
+    *,
+    window: int = 0,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    _, c, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / np.sqrt(d)
+
+    pc = (-c) % block_c
+    if pc:
+        k = jnp.pad(k, ((0, 0), (0, pc), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pc), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pc), constant_values=-1)
+    cc = k.shape[1]
+    nc = cc // block_c
+
+    qg = q.reshape(b, kh, g, d)
+    qpos = q_pos.astype(jnp.int32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, num_c_blocks=nc, window=window, scale=scale
+        ),
+        grid=(b, kh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, c_: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_c, 1, d), lambda i, j, c_: (i, c_, j, 0)),
+            pl.BlockSpec((1, block_c, 1, d), lambda i, j, c_: (i, c_, j, 0)),
+            pl.BlockSpec((block_c,), lambda i, j, c_: (c_,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, c_: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, k_pos, qpos)
+    return out.reshape(b, h, d)

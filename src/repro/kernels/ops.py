@@ -1,0 +1,49 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a real TPU these dispatch to the compiled kernels; on CPU (this
+container) they run in interpret mode, which executes the kernel body in
+Python — correct but slow, so the model code uses the pure-jnp paths by
+default and these wrappers are exercised by tests/benchmarks and are the
+drop-in used on hardware (``use_kernels=True`` plumbing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.entropy_exit import entropy_exit_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+__all__ = ["entropy_exit", "flash_decode", "ssd_scan", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def entropy_exit(logits, threshold, *, interpret: bool | None = None):
+    """(B, V) logits -> (normalized entropy (B,), exit flags (B,))."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return entropy_exit_pallas(logits, threshold, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def flash_decode(q, k, v, k_pos, q_pos, *, window: int = 0,
+                 interpret: bool | None = None):
+    """Single-token GQA decode attention against a (ring) KV cache."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return flash_decode_pallas(q, k, v, k_pos, q_pos, window=window,
+                               interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, a, b_mat, c_mat, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """Mamba2 chunked SSD scan: (y, final_state)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return ssd_scan_pallas(x, a, b_mat, c_mat, chunk=chunk, interpret=interp)

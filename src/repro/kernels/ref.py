@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+These are *definitions*, written for clarity not speed; tests sweep shapes
+and dtypes asserting the kernels (interpret=True on CPU) match them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["entropy_exit_ref", "flash_decode_ref", "ssd_scan_ref"]
+
+
+def entropy_exit_ref(
+    logits: jax.Array, threshold: float
+) -> tuple[jax.Array, jax.Array]:
+    """Normalized softmax entropy over the last axis + exit decision.
+
+    Returns (entropy (B,), exit (B,) bool).  fp32 math.
+    """
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    h = -jnp.sum(jnp.exp(logp) * logp, axis=-1) / np.log(lf.shape[-1])
+    return h, h < threshold
+
+
+def flash_decode_ref(
+    q: jax.Array,  # (B, H, D)
+    k: jax.Array,  # (B, C, K, D)
+    v: jax.Array,  # (B, C, K, D)
+    k_pos: jax.Array,  # (C,) int32, -1 = empty slot
+    q_pos: jax.Array,  # () int32
+    window: int = 0,
+) -> jax.Array:
+    """Single-token GQA decode attention with slot validity + optional
+    sliding window.  Returns (B, H, D) in q.dtype."""
+    b, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qf = q.reshape(b, kh, g, d).astype(jnp.float32) / np.sqrt(d)
+    s = jnp.einsum("bkgd,bckd->bkgc", qf, k.astype(jnp.float32))
+    valid = (k_pos >= 0) & (k_pos <= q_pos)
+    if window > 0:
+        valid &= q_pos - k_pos < window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (B, L, H, P)  dt-scaled inputs
+    a: jax.Array,  # (B, L, H)     per-step log decay (negative)
+    b_mat: jax.Array,  # (B, L, H, N)
+    c_mat: jax.Array,  # (B, L, H, N)
+    h0: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential SSM recurrence (the semantic definition of SSD):
+        h_t = exp(a_t) h_{t-1} + x_t (x) B_t ;  y_t = h_t . C_t
+    Returns (y (B,L,H,P), final h (B,H,P,N)).  fp32 math."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+
+    def step(hs, t):
+        hn = hs * jnp.exp(af[:, t])[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xf[:, t], bf[:, t]
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", hn, cf[:, t])
+        return hn, y
+
+    hinit = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    hlast, ys = jax.lax.scan(step, hinit, jnp.arange(l))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hlast

@@ -1,0 +1,133 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the Mamba2 GPU kernel (DESIGN.md: no warp-level scan on
+TPU — instead the chunk-local work is cast as (chunk x chunk) decay matmuls
+that run on the MXU, and the only sequential dependency is the tiny
+(P x N) state carried across chunk tiles in VMEM scratch):
+
+    per chunk:  Y_diag = ((C B^T) o exp(segsum(a))) X
+                Y_off  = exp(cumsum(a)) * (C h_prev^T)
+                h_new  = exp(sum a) h_prev + X^T (exp(sum a - cumsum a) o B)
+
+Grid: (B, H, n_chunks), chunk dim sequential (carries h in scratch).
+Block tiles: x (1, chunk, 1, P), B/C (1, chunk, 1, N) — P, N are multiples
+of the 128 lane width for the assigned configs (P=64 pads to 128 via the
+wrapper when needed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _kernel(
+    x_ref,  # (1, L, 1, P)
+    a_ref,  # (1, L, 1)
+    b_ref,  # (1, L, 1, N)
+    c_ref,  # (1, L, 1, N)
+    y_ref,  # (1, L, 1, P) out
+    hout_ref,  # (1, 1, P, N) out (final state)
+    h_scr,  # (P, N) scratch fp32
+    *,
+    num_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (L, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)  # (L, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)  # (L, N)
+    l = x.shape[0]
+
+    a_cum = jnp.cumsum(a)  # inclusive
+    # decay[i, j] = exp(sum_{k=j+1..i} a_k) for i >= j.
+    diff = a_cum[:, None] - a_cum[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    decay = jnp.where(row >= col, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L)
+    y_diag = jax.lax.dot_general(
+        scores * decay, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (L, P)
+
+    h_prev = h_scr[...]
+    in_decay = jnp.exp(a_cum)  # (L,)
+    y_off = in_decay[:, None] * jax.lax.dot_general(
+        cm, h_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, N) x (P, N)^T -> (L, P)
+
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # State update.
+    to_end = jnp.exp(a_cum[-1] - a_cum)  # (L,)
+    states = jax.lax.dot_general(
+        x, bm * to_end[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (P, N)
+    h_scr[...] = h_prev * jnp.exp(a_cum[-1]) + states
+
+    @pl.when(ci == num_chunks - 1)
+    def _final():
+        hout_ref[0, 0] = h_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jax.Array,  # (B, L, H, P)  dt-scaled inputs
+    a: jax.Array,  # (B, L, H)     log decays
+    b_mat: jax.Array,  # (B, L, H, N)
+    c_mat: jax.Array,  # (B, L, H, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final state (B,H,P,N))."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        # a=0 (decay 1) and x=0 keep the padded tail a state no-op.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ll = x.shape[1]
+    nc = ll // chunk
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_kernel, num_chunks=nc),
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda i, j, c_: (i, c_, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, j, c_: (i, c_, j)),
+            pl.BlockSpec((1, chunk, 1, n), lambda i, j, c_: (i, c_, j, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda i, j, c_: (i, c_, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda i, j, c_: (i, c_, j, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, c_: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, ll, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b_mat, c_mat)
+    return y[:, :l], h_final

@@ -1,0 +1,328 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init) — this is why this module sets XLA_FLAGS globally and
+nothing else in the repo does.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_8b --shape decode_32k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod     # 2x16x16
+    ... --force     re-run combos that already have a result JSON
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run and §Roofline (benchmarks/roofline.py).
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    cache_specs,
+    config_for_shape,
+    decode_input_specs,
+    param_specs,
+    prefill_input_specs,
+    shape_supported,
+    train_batch_specs,
+)
+from repro.models import model as M
+from repro.sharding.ctx import activation_sharding
+from repro.sharding.policy import make_policy
+from repro.training.optimizer import make_optimizer
+from repro.training.train_loop import init_train_state, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective-type payload bytes per device, from optimized HLO.
+
+    For each collective instruction we take the largest typed shape on the
+    line (operand or result) as the payload that crosses the interconnect —
+    exact for all-reduce/all-to-all/permute, and the gathered/full size for
+    all-gather / reduce-scatter (the quantity the ICI actually carries,
+    up to the (n-1)/n ring factor which we fold into the roofline constant).
+    """
+    out = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*.*?\b(" + "|".join(_COLLECTIVES) + r")",
+                     stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        best = 0.0
+        for dt, dims in shape_re.findall(stripped):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            best = max(best, n * _DTYPE_BYTES[dt])
+        out[op] += best
+        counts[op] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+def _mem_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_bytes_est": ma.argument_size_in_bytes
+        + ma.temp_size_in_bytes
+        + ma.output_size_in_bytes
+        - ma.alias_size_in_bytes,
+    }
+
+
+def _cost_stats(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ca = ca or {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+# ---------------------------------------------------------------------------
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, moe_dispatch: str):
+    """Returns (jitted fn, abstract args tuple) for this workload kind."""
+    policy = make_policy(mesh, cfg)
+    p_shapes = param_specs(cfg)
+    p_shard = policy.params_shardings(p_shapes)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        # Cap accumulation so each microbatch covers all batch shards.
+        batch_shards = 1
+        for a in ("pod", "data"):
+            if a in mesh.shape:
+                batch_shards *= mesh.shape[a]
+        accum = max(1, min(cfg.grad_accum, shape.global_batch // batch_shards))
+        step_fn = make_train_step(cfg, opt, moe_dispatch=moe_dispatch, accum=accum)
+        batch = train_batch_specs(cfg, shape)
+        state_shapes = jax.eval_shape(lambda p: init_train_state(p, opt), p_shapes)
+        state_shard = {
+            "params": p_shard,
+            "opt": policy.opt_state_shardings(p_shapes, cfg.optimizer),
+            "step": policy.replicated(),
+        }
+        # Explicit out_shardings: without them XLA may choose replicated
+        # outputs for updated params, breaking donation aliasing (observed
+        # +20 GB/dev on the 76B config).
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(state_shard, policy.data_shardings(batch)),
+            out_shardings=(state_shard, None),
+            donate_argnums=0,
+        )
+        return fn, (state_shapes, batch)
+
+    if shape.kind == "prefill":
+        inputs = prefill_input_specs(cfg, shape)
+        caches = cache_specs(cfg, shape)
+        cache_shard = policy.cache_shardings(caches)
+        fn = jax.jit(
+            lambda params, inp, c: M.prefill(
+                params, inp, cfg, c, moe_dispatch=moe_dispatch
+            ),
+            in_shardings=(
+                p_shard,
+                policy.data_shardings(inputs),
+                cache_shard,
+            ),
+            out_shardings=(None, cache_shard),
+            donate_argnums=2,
+        )
+        return fn, (p_shapes, inputs, caches)
+
+    # decode
+    io = decode_input_specs(cfg, shape)
+    caches = cache_specs(cfg, shape)
+    fn = jax.jit(
+        lambda params, tok, pos, c: M.decode_step(
+            params, tok, pos, c, cfg, moe_dispatch=moe_dispatch
+        ),
+        in_shardings=(
+            p_shard,
+            policy.data_shardings({"t": io["token"]})["t"],
+            policy.replicated(),
+            policy.cache_shardings(caches),
+        ),
+        donate_argnums=3,
+    )
+    return fn, (p_shapes, io["token"], io["pos"], caches)
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    moe_dispatch: str = "einsum",
+    out_dir: Path = RESULTS_DIR,
+    force: bool = False,
+    tag: str = "",
+    overrides: dict | None = None,
+) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    shape = INPUT_SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, why = shape_supported(cfg0, shape)
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "moe_dispatch": moe_dispatch,
+        "tag": tag,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _write(out_path, rec)
+        return rec
+
+    cfg = config_for_shape(cfg0, shape)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+        rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        t0 = time.time()
+        fn, args = build_step(cfg, shape, mesh, moe_dispatch)
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        with mesh, activation_sharding(mesh, batch_axes):
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        hlo = compiled.as_text()
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        hlo_stats = analyze_hlo(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=_mem_stats(compiled),
+            cost=_cost_stats(compiled),
+            # Trip-count-corrected per-device totals (hlo_analysis.py):
+            # XLA's cost_analysis counts while bodies once.
+            dot_flops=hlo_stats["dot_flops"],
+            hbm_bytes=hlo_stats["hbm_bytes"],
+            collectives={**hlo_stats["collectives"], "_counts": hlo_stats["counts"]},
+            num_params=cfg.num_params(),
+            active_params=cfg.active_params(),
+            sliding_window=cfg.sliding_window,
+            hlo_bytes=len(hlo),
+        )
+        print(compiled.memory_analysis())
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path: Path, rec: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=2, default=str))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-dispatch", default="einsum",
+                    choices=["einsum", "onehot_small"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for experiment variants")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override field=value (perf experiments)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("true", "True"):
+            v = True
+        elif v in ("false", "False"):
+            v = False
+        elif v.isdigit():
+            v = int(v)
+        overrides[k] = v
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, args.moe_dispatch,
+                              force=args.force, tag=args.tag,
+                              overrides=overrides or None)
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_err += status == "error"
+                n_skip += status == "skipped"
+                mem = rec.get("memory", {}).get("peak_bytes_est")
+                mem_s = f"{mem / 1e9:.2f} GB/dev" if mem else "-"
+                print(
+                    f"[{status:7s}] {arch:20s} {shape:12s} "
+                    f"{'2x16x16' if mp else '16x16':8s} {mem_s}"
+                    + (f"  ERR: {rec.get('error', '')[:120]}" if status == "error" else "")
+                )
+    print(f"\nok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

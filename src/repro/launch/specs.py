@@ -1,0 +1,101 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x input shape).
+
+No device memory is ever allocated here — these are the stand-ins the
+dry-run lowers against.  ``long_500k`` swaps in the sub-quadratic config
+variant (sliding-window attention for dense/MoE/VLM/hybrid-shared-attn;
+SSM state is O(1) natively); whisper skips it (DESIGN.md Sec. 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+__all__ = [
+    "LONG_CONTEXT_WINDOW",
+    "shape_supported",
+    "config_for_shape",
+    "train_batch_specs",
+    "prefill_input_specs",
+    "decode_input_specs",
+]
+
+LONG_CONTEXT_WINDOW = 8192
+
+SDS = jax.ShapeDtypeStruct
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported?, reason-if-not)."""
+    if shape.name == "long_500k" and cfg.arch_type == "audio":
+        return False, (
+            "enc-dec ASR decoder has a hard cross-attention context (1500 "
+            "frames); no sub-quadratic self-attention story at 524k tokens "
+            "(DESIGN.md Sec. 4 skip)"
+        )
+    return True, ""
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Long-context decode uses the sliding-window variant for attention
+    archs; everything else runs the published config unchanged."""
+    if shape.name == "long_500k" and cfg.arch_type != "ssm":
+        if cfg.sliding_window == 0:
+            cfg = dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _token_batch(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    out = {}
+    if cfg.frontend == "vision":
+        text = seq - cfg.num_patches
+        assert text > 0, "seq_len must exceed the visual prefix"
+        out["tokens"] = SDS((batch, text), jnp.int32)
+        out["patch_embeds"] = SDS((batch, cfg.num_patches, cfg.d_model), jnp.float32)
+    elif cfg.frontend == "audio":
+        out["tokens"] = SDS((batch, seq), jnp.int32)
+        out["frame_embeds"] = SDS(
+            (batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32
+        )
+    else:
+        out["tokens"] = SDS((batch, seq), jnp.int32)
+    return out
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    batch = _token_batch(cfg, shape.global_batch, shape.seq_len)
+    batch["labels"] = SDS(batch["tokens"].shape, jnp.int32)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    return _token_batch(cfg, shape.global_batch, shape.seq_len)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Specs for (token, pos) of one decode step; caches come from
+    jax.eval_shape over model.init_caches."""
+    return {
+        "token": SDS((shape.global_batch, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract cache tree via eval_shape (no allocation)."""
+    from repro.models import model as M
+
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def param_specs(cfg: ModelConfig):
+    from repro.models import model as M
+
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: M.init_params(key, cfg))

@@ -1,0 +1,129 @@
+"""B-AlexNet — the paper's own evaluation network (Sec. VI).
+
+AlexNet main branch + one side branch after the first conv/pool stage,
+exactly as the paper's B-AlexNet [5].  Used by the paper-validation
+benchmarks (Figs. 4-6): per-layer times and output sizes feed the
+partitioner, and the branch posterior entropy drives calibration.
+
+Layers are exposed individually (``layer_fns``) because the partitioner
+needs per-layer costs — this is the paper's chain graph v_1..v_N.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BAlexNetConfig", "init_b_alexnet", "layer_fns", "forward", "branch_forward"]
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class BAlexNetConfig:
+    num_classes: int = 2  # the paper's cat-vs-dog task
+    image_size: int = 224
+    branch_after: int = 1  # side branch after the first conv stage (paper)
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = 1.0 / np.sqrt(kh * kw * cin)
+    return {
+        "w": scale * jax.random.normal(key, (kh, kw, cin, cout), jnp.float32),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _fc_init(key, din, dout):
+    return {
+        "w": (1.0 / np.sqrt(din)) * jax.random.normal(key, (din, dout), jnp.float32),
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+def _conv(p, x, stride, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def _maxpool(x, k=3, s=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID"
+    )
+
+
+def init_b_alexnet(key, cfg: BAlexNetConfig = BAlexNetConfig()) -> Params:
+    ks = jax.random.split(key, 10)
+    return {
+        "conv1": _conv_init(ks[0], 11, 11, 3, 64),
+        "conv2": _conv_init(ks[1], 5, 5, 64, 192),
+        "conv3": _conv_init(ks[2], 3, 3, 192, 384),
+        "conv4": _conv_init(ks[3], 3, 3, 384, 256),
+        "conv5": _conv_init(ks[4], 3, 3, 256, 256),
+        "fc6": _fc_init(ks[5], 256 * 6 * 6, 4096),
+        "fc7": _fc_init(ks[6], 4096, 4096),
+        "fc8": _fc_init(ks[7], 4096, cfg.num_classes),
+        # Side branch b_1: one conv + pooled classifier (BranchyNet [5]).
+        "b1_conv": _conv_init(ks[8], 3, 3, 64, 32),
+        "b1_fc": _fc_init(ks[9], 32 * 13 * 13, cfg.num_classes),
+    }
+
+
+def layer_fns(params: Params) -> list[tuple[str, Callable]]:
+    """The main branch as the paper's chain v_1..v_N (conv stages fused with
+    their pools, matching how the paper's Fig. 5 labels partition points)."""
+
+    def l1(x):  # conv1 + pool1
+        return _maxpool(jax.nn.relu(_conv(params["conv1"], x, 4)))
+
+    def l2(x):  # conv2 + pool2
+        return _maxpool(jax.nn.relu(_conv(params["conv2"], x, 1)))
+
+    def l3(x):
+        return jax.nn.relu(_conv(params["conv3"], x, 1))
+
+    def l4(x):
+        return jax.nn.relu(_conv(params["conv4"], x, 1))
+
+    def l5(x):  # conv5 + pool5
+        return _maxpool(jax.nn.relu(_conv(params["conv5"], x, 1)))
+
+    def l6(x):
+        flat = x.reshape(x.shape[0], -1)
+        return jax.nn.relu(flat @ params["fc6"]["w"] + params["fc6"]["b"])
+
+    def l7(x):
+        return jax.nn.relu(x @ params["fc7"]["w"] + params["fc7"]["b"])
+
+    def l8(x):
+        return x @ params["fc8"]["w"] + params["fc8"]["b"]
+
+    return [
+        ("conv1", l1), ("conv2", l2), ("conv3", l3), ("conv4", l4),
+        ("conv5", l5), ("fc6", l6), ("fc7", l7), ("fc8", l8),
+    ]
+
+
+def branch_forward(params: Params, h1: jax.Array) -> jax.Array:
+    """Side branch b_1 logits from the conv1-stage output."""
+    y = _maxpool(jax.nn.relu(_conv(params["b1_conv"], h1, 1)))
+    return y.reshape(y.shape[0], -1) @ params["b1_fc"]["w"] + params["b1_fc"]["b"]
+
+
+def forward(params: Params, images: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (main logits, branch-1 logits)."""
+    h = images
+    fns = layer_fns(params)
+    h1 = None
+    for i, (_, fn) in enumerate(fns):
+        h = fn(h)
+        if i == 0:
+            h1 = h
+    return h, branch_forward(params, h1)

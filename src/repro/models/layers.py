@@ -1,0 +1,160 @@
+"""Primitive layers: norms, RoPE, MLPs, embeddings.
+
+Everything is functional: ``init_*`` builds a param pytree from a PRNG key,
+``apply`` functions are pure.  Params are kept in fp32 and cast to the
+compute dtype at use (standard mixed-precision discipline); norm reductions
+stay in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "nonparametric_ln",
+    "norm_apply",
+    "norm_init",
+    "rope_frequencies",
+    "apply_rope",
+    "mlp_init",
+    "mlp_apply",
+    "embedding_init",
+    "embed",
+    "sinusoidal_positions",
+]
+
+Params = dict
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None) -> jax.Array:
+    """Truncated-normal init, fan-in scaled (matches common LLM practice)."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    return scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, (d_in, d_out), dtype=jnp.float32
+    )
+
+
+def dense(w: jax.Array, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.einsum("...i,io->...o", x.astype(dtype), w.astype(dtype))
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def nonparametric_ln(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo's non-parametric LayerNorm: no scale, no bias [arXiv:2402.00838]."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm_init(norm_type: str, d: int) -> Params:
+    if norm_type == "rmsnorm":
+        return rmsnorm_init(d)
+    if norm_type == "nonparametric_ln":
+        return {}  # parameter-free
+    raise ValueError(norm_type)
+
+
+def norm_apply(norm_type: str, params: Params, x: jax.Array) -> jax.Array:
+    if norm_type == "rmsnorm":
+        return rmsnorm(params, x)
+    if norm_type == "nonparametric_ln":
+        return nonparametric_ln(x)
+    raise ValueError(norm_type)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embedding; (head_dim // 2,) fp32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(
+    x: jax.Array,  # (..., seq, heads, head_dim)
+    positions: jax.Array,  # (..., seq) absolute token positions
+    theta: float,
+) -> jax.Array:
+    """Rotate pairs (x[2i], x[2i+1]); fp32 trig, output in input dtype."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    """Whisper-style sinusoidal embedding table, (seq_len, d_model) fp32."""
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * dim / d_model)
+    table = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(table, jnp.float32)
+
+
+def sinusoidal_embed(positions: jax.Array, d_model: int) -> jax.Array:
+    """Sinusoidal embedding at dynamic (traced) positions; (..., d_model)."""
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)
+    angle = positions.astype(jnp.float32)[..., None] / jnp.power(
+        10_000.0, 2 * dim / d_model
+    )
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str) -> Params:
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff),
+            "w_up": dense_init(ks[1], d_model, d_ff),
+            "w_down": dense_init(ks[2], d_ff, d_model),
+        }
+    if mlp_type == "gelu":
+        return {
+            "w_up": dense_init(ks[0], d_model, d_ff),
+            "w_down": dense_init(ks[1], d_ff, d_model),
+        }
+    raise ValueError(mlp_type)
+
+
+def mlp_apply(params: Params, x: jax.Array, mlp_type: str) -> jax.Array:
+    dtype = x.dtype
+    if mlp_type == "swiglu":
+        g = dense(params["w_gate"], x, dtype)
+        u = dense(params["w_up"], x, dtype)
+        return dense(params["w_down"], jax.nn.silu(g) * u, dtype)
+    if mlp_type == "gelu":
+        u = dense(params["w_up"], x, dtype)
+        return dense(params["w_down"], jax.nn.gelu(u), dtype)
+    raise ValueError(mlp_type)
+
+
+# ----------------------------------------------------------------- embedding
+def embedding_init(key, vocab: int, d_model: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+
+
+def embed(table: jax.Array, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return table.astype(dtype)[tokens]

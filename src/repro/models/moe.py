@@ -1,0 +1,181 @@
+"""Mixture-of-Experts: top-k router + capacity-based dispatch/combine.
+
+Two dispatch strategies, selectable at call time:
+
+  * ``"einsum"`` — GShard/MaxText-style dense dispatch: a one-hot
+    (groups, tokens, experts, capacity) tensor contracted against the
+    activations.  Sharding-friendly (the expert axis lives on "model" and
+    XLA SPMD inserts the all-to-alls), but the dispatch einsums burn real
+    FLOPs — visible in the roofline's MODEL_FLOPS/HLO_FLOPs ratio.  This is
+    the baseline.
+  * ``"onehot_small"`` — same math with the dispatch tensor kept in the
+    minimal integer form and contracted via take/segment_sum.  Fewer FLOPs,
+    gather/scatter instead; used by the perf pass (EXPERIMENTS §Perf).
+
+Tokens are processed in fixed-size groups (GSPMD-friendly static shapes);
+per-group expert capacity C = ceil(group_tokens * top_k * capacity_factor /
+num_experts).  Overflowing tokens are dropped (their combine weight is zero
+and the residual path carries them), the standard "token dropping" regime.
+
+Router auxiliary load-balance loss follows Switch/GShard:
+    aux = num_experts * sum_e (frac_tokens_e * mean_gate_e).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, dense_init
+
+__all__ = ["moe_init", "moe_apply", "router_topk"]
+
+Params = dict
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    """Stacked expert weights: (E, d, ff) so the expert axis shards."""
+    ks = jax.random.split(key, 7)
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, scale=0.02),
+        "w_gate": scale * jax.random.truncated_normal(ks[1], -2, 2, (e, d, ff), jnp.float32),
+        "w_up": scale * jax.random.truncated_normal(ks[2], -2, 2, (e, d, ff), jnp.float32),
+        "w_down": (1.0 / np.sqrt(ff))
+        * jax.random.truncated_normal(ks[3], -2, 2, (e, ff, d), jnp.float32),
+    }
+    if cfg.num_shared_experts:
+        sff = ff * cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d, sff),
+            "w_up": dense_init(ks[5], d, sff),
+            "w_down": dense_init(ks[6], sff, d),
+        }
+    return p
+
+
+def router_topk(
+    logits: jax.Array, top_k: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Softmax-then-topk routing (DeepSeek-V3 normalizes over the selected
+    experts; we renormalize the top-k mass which matches both it and Qwen3).
+
+    Returns (weights (..., top_k), indices (..., top_k), aux_loss scalar).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    e = logits.shape[-1]
+    # Load-balance aux: fraction routed to e  x  mean router prob of e.
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (..., top_k, E)
+    frac = onehot.sum(axis=tuple(range(onehot.ndim - 1))) / (
+        np.prod(onehot.shape[:-2]) * 1.0
+    )
+    mean_prob = probs.reshape(-1, e).mean(0)
+    aux = e * jnp.sum(frac / top_k * mean_prob)
+    return w.astype(logits.dtype), idx, aux
+
+
+def _experts_ffn(p: Params, x_e: jax.Array, dtype) -> jax.Array:
+    """Per-expert SwiGLU on (E, C', d) -> (E, C', d)."""
+    g = jnp.einsum("ecd,edf->ecf", x_e, p["w_gate"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", x_e, p["w_up"].astype(dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"].astype(dtype))
+
+
+def moe_apply(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    group_size: int = 256,
+    dispatch: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B, S, d), router aux loss).
+
+    dispatch="auto" picks einsum (GShard-faithful) while the dense dispatch
+    tensor stays small, and falls back to the gather/scatter form when it
+    would not (prefill-scale MoE: tokens * group * top_k * cf bytes explode;
+    the switch is the shape-dependent algorithm choice a production system
+    makes — both paths are numerically equivalent, tests assert it).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    dtype = x.dtype
+    if dispatch == "auto":
+        # Per-device dense-dispatch footprint on the canonical 16x16 mesh
+        # (G over data, E over model): tokens * gsz * topk * cf * 2B / 256.
+        tokens_total = b * s
+        disp_bytes = (
+            tokens_total * min(group_size, tokens_total) * k
+            * cfg.capacity_factor * 2 / 256
+        )
+        dispatch = "einsum" if disp_bytes <= 2e9 else "onehot_small"
+
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    gsz = min(group_size, t)
+    pad = (-t) % gsz
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    ng = tokens.shape[0] // gsz
+    xg = tokens.reshape(ng, gsz, d)
+
+    logits = dense(params["router"], xg, dtype)  # (G, T, E)
+    w, idx, aux = router_topk(logits, k)  # (G,T,k), (G,T,k)
+
+    cap = int(np.ceil(gsz * k * cfg.capacity_factor / e))
+    cap = max(cap, 1)
+
+    # Position of each (token, choice) within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (G,T,k,E)
+    flat = onehot.reshape(ng, gsz * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=1) - 1  # (G, T*k, E)
+    pos = (pos_in_e * flat).sum(-1).reshape(ng, gsz, k)  # (G,T,k)
+    keep = pos < cap
+    w = jnp.where(keep, w, 0.0)
+
+    if dispatch == "einsum":
+        # (G, T, k, E, C) one-hot dispatch/combine, contracted densely.
+        disp = (
+            jax.nn.one_hot(idx, e, dtype=dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=dtype)[
+                ..., None, :
+            ]
+        )[..., :cap]  # (G,T,k,E,C) — slot `cap` is the drop bucket
+        disp_sum = disp.sum(2)  # (G,T,E,C)
+        x_e = jnp.einsum("gtec,gtd->gecd", disp_sum, xg)  # all-to-all here
+        y_e = jax.vmap(lambda xe: _experts_ffn(params, xe, dtype))(x_e)
+        comb = (disp * w[..., None, None]).sum(2)  # (G,T,E,C)
+        yg = jnp.einsum("gtec,gecd->gtd", comb, y_e)
+    elif dispatch == "onehot_small":
+        # Gather/scatter form: build (E, C) token indices per group.
+        def per_group(xg1, idx1, pos1, keep1, w1):
+            # slot owner: for each (e, c), which token filled it (or -1).
+            tok_ids = jnp.arange(gsz)[:, None].repeat(k, 1)  # (T,k)
+            slot = jnp.where(keep1, pos1, cap)  # (T,k)
+            owner = jnp.full((e, cap + 1), gsz, jnp.int32)  # gsz = pad token
+            owner = owner.at[idx1.reshape(-1), slot.reshape(-1)].set(
+                tok_ids.reshape(-1), mode="drop"
+            )[:, :cap]
+            xg_pad = jnp.concatenate([xg1, jnp.zeros((1, d), xg1.dtype)], 0)
+            x_e = xg_pad[owner]  # (E, C, d)
+            y_e = _experts_ffn(params, x_e, dtype)
+            # combine: each token sums its surviving choices.
+            gathered = y_e[idx1, jnp.where(keep1, pos1, 0)]  # (T,k,d)
+            return (gathered * w1[..., None]).sum(1)
+
+        yg = jax.vmap(per_group)(xg, idx, pos, keep, w)
+    else:
+        raise ValueError(dispatch)
+
+    y = yg.reshape(-1, d)[:t].reshape(b, s, d)
+    if cfg.num_shared_experts:
+        sp = params["shared"]
+        g = dense(sp["w_gate"], x, dtype)
+        u = dense(sp["w_up"], x, dtype)
+        y = y + dense(sp["w_down"], jax.nn.silu(g) * u, dtype)
+    return y, aux

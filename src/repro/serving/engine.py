@@ -1,0 +1,133 @@
+"""Batched serving engine with BranchyNet early exits.
+
+The engine owns the jitted prefill/decode closures, tracks positions, and
+records per-branch exit statistics — the live measurement that calibrates
+the partitioner's ``p_k`` (paper Sec. IV-C: "the probability that a sample
+is classified at the side branch" is an input-data property, so a serving
+system must estimate it online).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.calibration import calibrate_exit_probs
+from repro.models import model as M
+
+__all__ = ["ServingEngine", "ExitStats"]
+
+
+@dataclasses.dataclass
+class ExitStats:
+    """Counts of first-exit events per branch across decoded tokens."""
+
+    branch_layers: tuple[int, ...]
+    counts: np.ndarray  # (K+1,): per branch + the main head
+    entropies: list[np.ndarray]  # per step: (K, B) normalized entropies
+
+    @property
+    def total(self) -> int:
+        return int(self.counts.sum())
+
+    def exit_fractions(self) -> np.ndarray:
+        return self.counts / max(self.total, 1)
+
+    def conditional_probs(self) -> np.ndarray:
+        """Sequential conditional p_k (what CostProfile consumes)."""
+        alive = float(self.total)
+        out = []
+        for c in self.counts[:-1]:
+            out.append(float(c) / alive if alive > 0 else 0.0)
+            alive -= float(c)
+        return np.asarray(out)
+
+    def calibrate(self, threshold: float):
+        ents = np.concatenate(self.entropies, axis=1)  # (K, steps*B)
+        return calibrate_exit_probs(ents, threshold)
+
+
+@dataclasses.dataclass
+class ServingEngine:
+    cfg: ModelConfig
+    params: Any
+    context_len: int = 4096
+
+    def __post_init__(self):
+        cfg = self.cfg
+        self._prefill = jax.jit(
+            lambda params, inputs, caches: M.prefill(params, inputs, cfg, caches)
+        )
+        self._decode = jax.jit(
+            lambda params, tok, pos, caches: M.decode_step(
+                params, tok, pos, caches, cfg
+            )
+        )
+
+    def start(self, inputs: dict) -> dict:
+        """Prefill a batch of prompts; returns mutable serve state."""
+        batch = inputs["tokens"].shape[0]
+        prompt_len = inputs["tokens"].shape[1]
+        if self.cfg.frontend == "vision":
+            prompt_len += self.cfg.num_patches
+        caches = M.init_caches(self.cfg, batch, self.context_len)
+        logits, caches = self._prefill(self.params, inputs, caches)
+        return {
+            "caches": caches,
+            "pos": prompt_len,
+            "last_logits": logits[:, 0],
+            "batch": batch,
+        }
+
+    def decode(
+        self, state: dict, steps: int, *, greedy: bool = True, key=None
+    ) -> tuple[np.ndarray, ExitStats]:
+        """Decode ``steps`` tokens; returns (tokens (B, steps), exit stats).
+
+        A sequence "exits" at the first branch whose normalized entropy
+        clears cfg.exit_threshold; its emitted token comes from that branch
+        head (BranchyNet inference, paper Sec. III).
+        """
+        cfg = self.cfg
+        k = len(cfg.branch_layers)
+        counts = np.zeros(k + 1, dtype=np.int64)
+        ents_log: list[np.ndarray] = []
+        toks_out = []
+
+        tok = jnp.argmax(state["last_logits"], -1).astype(jnp.int32)[:, None]
+        caches = state["caches"]
+        pos = state["pos"]
+        for _ in range(steps):
+            out = self._decode(self.params, tok, jnp.asarray(pos, jnp.int32), caches)
+            caches = out["caches"]
+            pos += 1
+
+            main_tok = jnp.argmax(out["logits"], -1).astype(jnp.int32)
+            chosen = main_tok
+            exited = jnp.zeros(main_tok.shape, bool)
+            step_ents = []
+            for j, layer in enumerate(cfg.branch_layers):
+                e = out["branch_entropy"][layer]
+                step_ents.append(np.asarray(e))
+                b_tok = jnp.argmax(out["branch_logits"][layer], -1).astype(jnp.int32)
+                take = out["branch_exit"][layer] & ~exited
+                chosen = jnp.where(take, b_tok, chosen)
+                counts[j] += int(np.asarray(take).sum())
+                exited = exited | out["branch_exit"][layer]
+            counts[k] += int(np.asarray(~exited).sum())
+            ents_log.append(np.stack(step_ents) if step_ents else np.zeros((0, state["batch"])))
+
+            tok = chosen[:, None]
+            toks_out.append(np.asarray(chosen))
+
+        state["caches"] = caches
+        state["pos"] = pos
+        state["last_logits"] = out["logits"]
+        return np.stack(toks_out, axis=1), ExitStats(
+            cfg.branch_layers, counts, ents_log
+        )

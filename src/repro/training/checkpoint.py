@@ -1,0 +1,80 @@
+"""Checkpointing: flat-key .npz save/restore of param/opt pytrees.
+
+No orbax in this environment; this is a self-contained implementation with
+the properties a real deployment needs: deterministic flat addressing,
+dtype/shape manifest, atomic writes, and partial restore (e.g. params-only
+from a train checkpoint for serving).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "checkpoint_manifest"]
+
+_SEP = "##"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for keypath, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_k(k) for k in keypath)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _k(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def save_checkpoint(path: str, tree: Any, step: int | None = None) -> None:
+    """Atomic: write to tmp in the same dir, then rename."""
+    flat = _flatten(tree)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __manifest__=json.dumps(manifest), **flat)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+
+
+def checkpoint_manifest(path: str) -> dict:
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(str(z["__manifest__"]))
+
+
+def restore_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Missing keys raise; extra keys are ignored
+    (partial restore)."""
+    with np.load(path, allow_pickle=False) as z:
+        flat_saved = {k: z[k] for k in z.files if k != "__manifest__"}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for keypath, leaf in leaves:
+        key = _SEP.join(_k(k) for k in keypath)
+        if key not in flat_saved:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat_saved[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,169 @@
+"""Optimizers (pure JAX — no optax in this environment): AdamW, Adafactor.
+
+Adafactor (factored second moments, no first moment) is the default above
+~30B params: AdamW's 8 bytes/param of fp32 state does not fit 16 GB/chip at
+512 chips for the 671B config (DESIGN.md Sec. 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer", "cosine_schedule"]
+
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params, jax.Array], tuple[Params, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def adamw(
+    lr: Callable | float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "m": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        grads = _clip_by_global_norm(grads, grad_clip)
+        stepf = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1**stepf)
+            vhat = v / (1 - b2**stepf)
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=_is3)
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=_is3)
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=_is3)
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    lr: Callable | float = 1e-2,
+    decay: float = 0.8,
+    eps1: float = 1e-30,
+    eps2: float = 1e-3,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Shazeer & Stern 2018, factored second moments for >=2-D params."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return jax.tree_util.tree_map(st, params)
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - stepf ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(s, g, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps1)
+                u = g / jnp.sqrt(
+                    (vr / denom)[..., None] * vc[..., None, :] + eps1
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps1)
+                new_s = {"v": v}
+            # Update clipping (RMS <= clip_threshold).
+            rms = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            scale = jnp.maximum(eps2, _rms(p)) * lr_t
+            newp = p.astype(jnp.float32) - scale * u
+            if weight_decay:
+                newp = newp - lr_t * weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), new_s
+
+        # state's per-param dicts are the traversal leaves (is_leaf on the
+        # first tree), grads/params align as array leaves underneath.
+        out = jax.tree_util.tree_map(upd, state, grads, params, is_leaf=_state_leaf)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=_is2)
+        new_state = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=_is2)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr=None, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr or 3e-4, **kw)
+    if name == "adafactor":
+        return adafactor(lr=lr or 1e-2, **kw)
+    raise ValueError(name)
+
+
+# ----------------------------------------------------------------- helpers
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32))))
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    if not max_norm:
+        return grads
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+def _is3(x):
+    return isinstance(x, tuple) and len(x) == 3
+
+
+def _is2(x):
+    return isinstance(x, tuple) and len(x) == 2
+
+
+def _state_leaf(x):
+    return isinstance(x, dict) and ("v" in x or "vr" in x)

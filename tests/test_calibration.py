@@ -1,0 +1,107 @@
+"""Calibration + latency-model unit/property tests (Eq. 4 consistency,
+Fig. 6 mechanism, distortion monotonicity)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    calibrate_exit_probs,
+    normalized_entropy,
+    threshold_sweep,
+)
+from repro.data.pipeline import DISTORTIONS, distort_embeddings, make_batch
+from repro.configs import get_smoke_config
+
+
+class TestEntropy:
+    def test_uniform_is_one(self):
+        h = normalized_entropy(jnp.zeros((3, 1000)))
+        np.testing.assert_allclose(np.asarray(h), 1.0, atol=1e-6)
+
+    def test_delta_is_zero(self):
+        logits = jnp.full((2, 100), -40.0).at[:, 3].set(40.0)
+        h = normalized_entropy(logits)
+        np.testing.assert_allclose(np.asarray(h), 0.0, atol=1e-6)
+
+    def test_invariant_to_shift(self):
+        key = jax.random.PRNGKey(0)
+        logits = jax.random.normal(key, (4, 64))
+        h1 = normalized_entropy(logits)
+        h2 = normalized_entropy(logits + 123.0)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-5)
+
+
+class TestCalibration:
+    def test_eq4_consistency_sequential(self):
+        rng = np.random.default_rng(0)
+        ents = rng.uniform(0, 1, (3, 500))
+        res = calibrate_exit_probs(ents, threshold=0.5)
+        # unconditional p_Y(k) = p_k prod_{i<k} (1 - p_i)  (asserted inside,
+        # re-checked here explicitly)
+        alive = 1.0
+        for k in range(3):
+            assert res.unconditional_p[k] == pytest.approx(
+                res.conditional_p[k] * alive
+            )
+            alive *= 1 - res.conditional_p[k]
+        # exit fractions + tail sum to 1
+        assert res.exit_fraction.sum() == pytest.approx(1.0)
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        k=st.integers(1, 4),
+        b=st.integers(1, 64),
+        thr=st.floats(0.05, 0.95),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_fractions_sum_to_one(self, k, b, thr, seed):
+        rng = np.random.default_rng(seed)
+        ents = rng.uniform(0, 1, (k, b))
+        res = calibrate_exit_probs(ents, thr)
+        assert res.exit_fraction.sum() == pytest.approx(1.0)
+        assert ((0 <= res.conditional_p) & (res.conditional_p <= 1)).all()
+
+    def test_threshold_sweep_monotone(self):
+        rng = np.random.default_rng(1)
+        ents = rng.uniform(0, 1, (2, 400))
+        sweep = threshold_sweep(ents, np.linspace(0.1, 0.9, 9))
+        # Higher threshold -> weakly more exits at the FIRST branch.
+        assert np.all(np.diff(sweep[:, 0]) >= -1e-12)
+
+
+class TestDistortion:
+    def test_noise_raises_branch_entropy(self):
+        """The Fig. 6 mechanism on the LM embedding stub: more distortion
+        -> higher branch entropy (flatter posterior)."""
+        from repro.models import model as M
+
+        cfg = get_smoke_config("internvl2_76b")
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        batch = make_batch(cfg, 4, 24)
+        key = jax.random.PRNGKey(5)
+
+        def branch_entropy(noise):
+            emb = distort_embeddings(key, jnp.asarray(batch["patch_embeds"]), noise)
+            inputs = {"tokens": jnp.asarray(batch["tokens"]), "patch_embeds": emb}
+            out = M.forward_train(params, {**inputs, "labels": jnp.asarray(batch["labels"])}, cfg)
+            return out  # losses only; we want entropies - use decode path
+
+        # Use prefill logits entropy as the confidence proxy.
+        ents = {}
+        for name, level in DISTORTIONS.items():
+            emb = distort_embeddings(key, jnp.asarray(batch["patch_embeds"]), level)
+            caches = M.init_caches(cfg, 4, 64)
+            logits, _ = M.prefill(
+                params,
+                {"tokens": jnp.asarray(batch["tokens"]), "patch_embeds": emb},
+                cfg, caches,
+            )
+            ents[name] = float(np.mean(np.asarray(normalized_entropy(logits[:, 0]))))
+        # Entropies should not DECREASE as noise grows (untrained nets are
+        # noisy; demand the low <= high ordering with tolerance).
+        assert ents["low"] <= ents["high"] + 0.05

@@ -1,0 +1,103 @@
+"""DAG min-cut partitioner (paper future work, DESIGN.md Sec. 7).
+
+Key property: on a chain with no branches, min-cut == shortest path.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BranchSpec, CostProfile, NetworkProfile, brute_force_split
+from repro.core.dag import DagCostModel, DagNode, chain_as_dag, min_cut_partition
+
+
+class TestChainEquivalence:
+    @settings(max_examples=60, deadline=None)
+    @given(
+        n=st.integers(2, 10),
+        gamma=st.floats(1.0, 500.0),
+        bw=st.floats(1e5, 1e9),
+        seed=st.integers(0, 2**16),
+    )
+    def test_mincut_equals_shortest_path_on_chains(self, n, gamma, bw, seed):
+        rng = np.random.default_rng(seed)
+        t_c = np.concatenate([[0.0], rng.uniform(1e-4, 1e-1, n)])
+        alpha = rng.uniform(1e2, 1e6, n + 1)
+        prof = CostProfile(
+            t_c=t_c, alpha=alpha, branches=(),
+            gamma=gamma, network=NetworkProfile("t", bw),
+        )
+        sp = brute_force_split(prof)
+
+        dag = chain_as_dag(t_c, alpha, bw, gamma)
+        edge, cloud, cost = min_cut_partition(dag)
+        assert cost == pytest.approx(sp.expected_time_s, rel=1e-6, abs=1e-9)
+        # The cut encodes the same contiguous split.
+        assert len(edge) == sp.split_layer
+
+    def test_branchy_dag_with_two_paths(self):
+        """A diamond DAG: input -> a -> {b, c} -> d.  With a fat b->d tensor
+        and a slow edge, the cut should place d (and what it needs) in the
+        cloud only when bandwidth makes that cheaper."""
+        def build(bw):
+            nodes = {
+                "a": DagNode("a", 10e-3, 1e-3),
+                "b": DagNode("b", 50e-3, 5e-3),
+                "c": DagNode("c", 50e-3, 5e-3),
+                "d": DagNode("d", 20e-3, 2e-3),
+            }
+            tx = 1e6 * 8 / bw
+            links = [
+                ("a", "b", tx), ("a", "c", tx),
+                ("b", "d", tx), ("c", "d", tx),
+            ]
+            return DagCostModel(nodes, links, input_upload_time=4e6 * 8 / bw,
+                                input_consumers=("a",))
+
+        # Fast network: everything cloud (edge is 10x slower).
+        edge, cloud, cost_fast = min_cut_partition(build(1e10))
+        assert edge == set()
+        # Very slow network: everything edge.
+        edge, cloud, cost_slow = min_cut_partition(build(1e3))
+        assert cloud == set()
+        # Mid: a valid cut with no cloud->edge back-flow.
+        edge, cloud, _ = min_cut_partition(build(2e8))
+        for u, v, _tx in build(2e8).links:
+            assert not (u in cloud and v in edge), "illegal cloud->edge flow"
+
+    def test_cost_is_minimal_vs_bruteforce(self):
+        """Exhaustive check on a small random DAG."""
+        rng = np.random.default_rng(3)
+        names = ["a", "b", "c", "d", "e"]
+        nodes = {
+            n: DagNode(n, float(rng.uniform(1e-3, 1e-1)),
+                       float(rng.uniform(1e-4, 1e-2)))
+            for n in names
+        }
+        links = [
+            ("a", "b", float(rng.uniform(1e-4, 5e-2))),
+            ("a", "c", float(rng.uniform(1e-4, 5e-2))),
+            ("b", "d", float(rng.uniform(1e-4, 5e-2))),
+            ("c", "d", float(rng.uniform(1e-4, 5e-2))),
+            ("d", "e", float(rng.uniform(1e-4, 5e-2))),
+        ]
+        model = DagCostModel(nodes, links, input_upload_time=0.05,
+                             input_consumers=("a",))
+        _, _, cost = min_cut_partition(model)
+
+        # Brute force over all downward-closed cloud sets.
+        best = np.inf
+        for mask in range(2 ** len(names)):
+            cloud = {n for i, n in enumerate(names) if mask >> i & 1}
+            # legality: no cloud -> edge dependency
+            if any(u in cloud and v not in cloud for u, v, _ in links):
+                continue
+            c = sum(nodes[n].t_cloud if n in cloud else nodes[n].t_edge
+                    for n in names)
+            c += sum(tx for u, v, tx in links if u not in cloud and v in cloud)
+            if "a" in cloud:
+                c += model.input_upload_time
+            best = min(best, c)
+        assert cost == pytest.approx(best, rel=1e-6)

@@ -1,0 +1,93 @@
+"""K-tier lattice solver: K=2 must reproduce the paper's solution; K=3
+verified against brute force over cut pairs."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BranchSpec, CostProfile, NetworkProfile, brute_force_split
+from repro.core.multitier import TierSpec, solve_multitier
+
+
+def random_chain(rng, n, with_branches=True):
+    t_c = np.concatenate([[0.0], rng.uniform(1e-4, 1e-1, n)])
+    alpha = rng.uniform(1e2, 1e6, n + 1)
+    p = np.zeros(n + 1)
+    if with_branches and n > 2:
+        for i in rng.choice(np.arange(1, n), size=min(2, n - 1), replace=False):
+            p[i] = rng.uniform(0, 1)
+    return t_c, alpha, p
+
+
+class TestTwoTierEquivalence:
+    @settings(max_examples=80, deadline=None)
+    @given(n=st.integers(2, 12), seed=st.integers(0, 2**16),
+           gamma=st.floats(1.0, 1000.0), bw=st.floats(1e5, 1e9))
+    def test_matches_paper_solver(self, n, seed, gamma, bw):
+        rng = np.random.default_rng(seed)
+        t_c, alpha, p = random_chain(rng, n)
+        tiers = [TierSpec("edge", gamma, bw), TierSpec("cloud", 1.0)]
+        plan = solve_multitier(t_c, alpha, p, tiers)
+
+        branches = tuple(
+            BranchSpec(i, float(p[i])) for i in range(1, n) if p[i] > 0
+        )
+        prof = CostProfile(
+            t_c=t_c, alpha=alpha, branches=branches, gamma=gamma,
+            network=NetworkProfile("t", bw),
+        )
+        ref = brute_force_split(prof)
+        assert plan.expected_time_s == pytest.approx(
+            ref.expected_time_s, rel=1e-9, abs=1e-12
+        )
+        assert plan.cut_after == (ref.split_layer,)
+
+
+class TestThreeTier:
+    @settings(max_examples=40, deadline=None)
+    @given(n=st.integers(2, 8), seed=st.integers(0, 2**16))
+    def test_matches_bruteforce_two_cuts(self, n, seed):
+        rng = np.random.default_rng(seed)
+        t_c, alpha, p = random_chain(rng, n)
+        tiers = [
+            TierSpec("device", 200.0, 1e6),
+            TierSpec("edge", 20.0, 2e7),
+            TierSpec("cloud", 1.0),
+        ]
+        plan = solve_multitier(t_c, alpha, p, tiers)
+
+        surv = np.cumprod(1.0 - p)
+        reach = np.concatenate([[1.0], surv[:-1]])
+
+        best = np.inf
+        for s1 in range(0, n + 1):
+            for s2 in range(s1, n + 1):
+                cost = 0.0
+                for i in range(1, n + 1):
+                    if i <= s1:
+                        cost += reach[i] * tiers[0].gamma * t_c[i]
+                    elif i <= s2:
+                        cost += reach[i] * tiers[1].gamma * t_c[i]
+                    else:
+                        # cloud evaluates no branches: frozen at the wire
+                        cost += reach[s2] * tiers[2].gamma * t_c[i]
+                # branch at a cut is not evaluated: wire survival reach[s].
+                # A hop only happens if a later tier actually runs layers
+                # (s == n means "never ship", e.g. device/edge-only).
+                if s1 < n or s2 < n:
+                    cost += reach[s1] * alpha[s1] * 8 / tiers[0].uplink_bps
+                if s2 < n:
+                    cost += reach[s2] * alpha[s2] * 8 / tiers[1].uplink_bps
+                best = min(best, cost)
+        assert plan.expected_time_s == pytest.approx(best, rel=1e-9, abs=1e-12)
+
+    def test_monotone_tiers(self):
+        """Layers never move backward through tiers."""
+        rng = np.random.default_rng(0)
+        t_c, alpha, p = random_chain(rng, 10)
+        tiers = [TierSpec("d", 100.0, 5e6), TierSpec("e", 10.0, 5e7),
+                 TierSpec("c", 1.0)]
+        plan = solve_multitier(t_c, alpha, p, tiers)
+        assert all(a <= b for a, b in zip(plan.tier_of_layer, plan.tier_of_layer[1:]))

@@ -1,0 +1,206 @@
+"""Solver equivalence: Dijkstra on G'_BDNN == closed form == brute force.
+
+This is the paper's central claim (Sec. V): BranchyNet partitioning reduces
+to shortest path.  We verify it exhaustively and property-based.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BranchSpec,
+    CostProfile,
+    NetworkProfile,
+    Partitioner,
+    brute_force_split,
+    build_partition_graph,
+    chain_costs_jax,
+    dijkstra,
+    expected_time,
+    expected_time_all_splits,
+    shortest_path_plan,
+    solve_chain_jax,
+)
+
+import jax.numpy as jnp
+
+
+def make_profile(
+    t_c, alpha, branch_pos, probs, gamma=10.0, bw=5.85e6, include_bc=False, bc=None
+):
+    branches = tuple(
+        BranchSpec(p, q, compute_time_cloud=(bc[i] if bc else 0.0))
+        for i, (p, q) in enumerate(zip(branch_pos, probs))
+    )
+    return CostProfile(
+        t_c=np.concatenate([[0.0], np.asarray(t_c, float)]),
+        alpha=np.asarray(alpha, float),
+        branches=branches,
+        gamma=gamma,
+        network=NetworkProfile("test", bw),
+        include_branch_compute=include_bc,
+    )
+
+
+class TestClosedForm:
+    def test_no_branch_matches_eq3(self):
+        """With no branches, E[T(s)] must equal Eq. 3: T_e + t_net + T_c."""
+        t_c = [0.01, 0.02, 0.03, 0.04]
+        alpha = [1e6, 2e5, 5e4, 1e5, 4e3]
+        prof = make_profile(t_c, alpha, [], [], gamma=10.0, bw=1e7)
+        costs = expected_time_all_splits(prof)
+        for s in range(5):
+            t_e = 10.0 * sum(t_c[:s])
+            t_net = alpha[s] * 8 / 1e7 if s < 4 else 0.0
+            tc = sum(t_c[s:])
+            assert costs[s] == pytest.approx(t_e + t_net + tc)
+
+    def test_single_branch_matches_eq5(self):
+        """Paper Eq. 5, one branch at k=1, split s >= k."""
+        t_c = np.array([0.02, 0.05, 0.04])
+        alpha = np.array([6e5, 1e5, 3e4, 1e3])
+        p = 0.7
+        prof = make_profile(t_c, alpha, [1], [p], gamma=100.0, bw=5.85e6)
+        costs = expected_time_all_splits(prof)
+        # Split at s=2 (branch b_1 evaluated on edge).
+        s = 2
+        t_e = prof.t_e
+        lhs = costs[s]
+        # Eq. 5: sum_{i<=k} t_i^e + (1 - p_Y(1)) (sum_{k<i<=s} t_i^e + t_net + T_c)
+        rhs = t_e[1] + (1 - p) * (t_e[2] + alpha[2] * 8 / 5.85e6 + t_c[2])
+        assert lhs == pytest.approx(rhs)
+
+    def test_p_one_kills_downstream_cost(self):
+        """p == 1: costs after the branch vanish (paper Sec. IV-C extreme)."""
+        prof = make_profile(
+            [0.01, 0.9, 0.9], [1e6, 1e4, 1e4, 1e3], [1], [1.0], gamma=1.0, bw=1e6
+        )
+        costs = expected_time_all_splits(prof)
+        # Any split past the branch costs just t_1 (everything else is dead).
+        assert costs[2] == pytest.approx(costs[3], rel=1e-9)
+        assert costs[3] == pytest.approx(prof.t_e[1])
+
+    def test_p_zero_equals_plain_dnn(self):
+        probs_zero = make_profile([0.01, 0.02], [1e5, 1e4, 1e3], [1], [0.0])
+        no_branch = make_profile([0.01, 0.02], [1e5, 1e4, 1e3], [], [])
+        np.testing.assert_allclose(
+            expected_time_all_splits(probs_zero), expected_time_all_splits(no_branch)
+        )
+
+
+class TestGraphEquivalence:
+    def test_graph_cost_equals_closed_form_all_splits(self):
+        """Every input->output path family in G'_BDNN prices Eq. 5/6."""
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            n = int(rng.integers(2, 9))
+            t_c = rng.uniform(1e-3, 1e-1, n)
+            alpha = rng.uniform(1e3, 1e6, n + 1)
+            k = int(rng.integers(0, n))  # number of branches
+            pos = sorted(rng.choice(np.arange(1, n), size=k, replace=False).tolist())
+            probs = rng.uniform(0, 1, k).tolist()
+            prof = make_profile(t_c, alpha, pos, probs, gamma=float(rng.uniform(1, 1000)))
+            plan_sp = shortest_path_plan(prof)  # asserts graph == closed form
+            plan_bf = brute_force_split(prof)
+            assert plan_sp.split_layer == plan_bf.split_layer or (
+                plan_sp.expected_time_s
+                == pytest.approx(plan_bf.expected_time_s, rel=1e-9)
+            )
+
+    def test_graph_shapes(self):
+        prof = make_profile([0.1, 0.2, 0.3], [1e5, 1e4, 1e4, 1e3], [1], [0.5])
+        g = build_partition_graph(prof)
+        assert "input" in g.adj and "output" in g.adj
+        cost, path = dijkstra(g)
+        assert path[0] == "input" and path[-1] == "output"
+        assert cost >= 0
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        n=st.integers(2, 10),
+        data=st.data(),
+    )
+    def test_property_dijkstra_is_optimal(self, n, data):
+        t_c = data.draw(
+            st.lists(st.floats(1e-4, 1.0), min_size=n, max_size=n), label="t_c"
+        )
+        alpha = data.draw(
+            st.lists(st.floats(1.0, 1e7), min_size=n + 1, max_size=n + 1), label="alpha"
+        )
+        k = data.draw(st.integers(0, n - 1), label="k")
+        pos = data.draw(
+            st.lists(
+                st.integers(1, n - 1), min_size=k, max_size=k, unique=True
+            ),
+            label="pos",
+        )
+        probs = data.draw(
+            st.lists(st.floats(0.0, 1.0), min_size=k, max_size=k), label="p"
+        )
+        gamma = data.draw(st.floats(1.0, 1e4), label="gamma")
+        bw = data.draw(st.floats(1e5, 1e10), label="bw")
+        prof = make_profile(t_c, alpha, sorted(pos), probs, gamma=gamma, bw=bw)
+        plan = shortest_path_plan(prof)
+        oracle = brute_force_split(prof)
+        assert plan.expected_time_s == pytest.approx(
+            oracle.expected_time_s, rel=1e-9, abs=1e-12
+        )
+
+
+class TestJaxSolver:
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(1)
+        for _ in range(10):
+            n = int(rng.integers(2, 12))
+            t_c = np.concatenate([[0.0], rng.uniform(1e-3, 1e-1, n)])
+            alpha = rng.uniform(1e3, 1e6, n + 1)
+            p = np.zeros(n + 1)
+            for i in rng.choice(np.arange(1, n), size=min(3, n - 1), replace=False):
+                p[i] = rng.uniform(0, 1)
+            gamma, bw = 50.0, 5.85e6
+            branches = [i for i in range(1, n) if p[i] > 0]
+            prof = make_profile(
+                t_c[1:], alpha, branches, [p[i] for i in branches], gamma=gamma, bw=bw
+            )
+            ref = expected_time_all_splits(prof)
+            got = chain_costs_jax(
+                jnp.asarray(t_c), jnp.asarray(alpha), jnp.asarray(p),
+                jnp.asarray(gamma), jnp.asarray(bw),
+            )
+            np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-5)
+
+    def test_solve_returns_argmin(self):
+        t_c = jnp.array([0.0, 0.01, 0.02, 0.03])
+        alpha = jnp.array([1e6, 1e4, 1e3, 1e2])
+        p = jnp.zeros(4)
+        s, t = solve_chain_jax(t_c, alpha, p, jnp.asarray(100.0), jnp.asarray(1e6))
+        costs = chain_costs_jax(t_c, alpha, p, jnp.asarray(100.0), jnp.asarray(1e6))
+        assert int(s) == int(np.argmin(np.asarray(costs)))
+        assert float(t) == pytest.approx(float(np.min(np.asarray(costs))))
+
+
+class TestPartitionerAPI:
+    def test_with_modifiers(self):
+        prof = make_profile([0.01, 0.02, 0.03], [1e6, 1e5, 1e4, 1e3], [1], [0.5])
+        part = Partitioner(prof)
+        p1 = part.solve()
+        p2 = part.with_gamma(1000.0).solve()
+        # A much slower edge can only move the split toward the cloud.
+        assert p2.split_layer <= p1.split_layer
+        p3 = part.with_exit_probs([1.0]).solve()
+        assert p3.expected_time_s <= p1.expected_time_s + 1e-12
+
+    def test_branch_compute_increases_cost(self):
+        base = make_profile([0.01, 0.02, 0.03], [1e6, 1e5, 1e4, 1e3], [1], [0.5])
+        withbc = make_profile(
+            [0.01, 0.02, 0.03], [1e6, 1e5, 1e4, 1e3], [1], [0.5],
+            include_bc=True, bc=[0.005],
+        )
+        c0 = expected_time_all_splits(base)
+        c1 = expected_time_all_splits(withbc)
+        # Branch compute charges only splits strictly beyond the branch.
+        np.testing.assert_allclose(c1[:2], c0[:2])
+        assert (c1[2:] > c0[2:]).all()

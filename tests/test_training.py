@@ -1,0 +1,152 @@
+"""Training substrate: optimizers, schedules, accumulation, checkpointing."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.training.checkpoint import (
+    checkpoint_manifest,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.optimizer import (
+    adafactor,
+    adamw,
+    cosine_schedule,
+    make_optimizer,
+)
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def quad_params():
+    return {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("name", ["adamw", "adafactor"])
+    def test_optimizer_minimizes_quadratic(self, name):
+        opt = make_optimizer(name, lr=0.1 if name == "adamw" else 0.5)
+        params = quad_params()
+        state = opt.init(params)
+
+        def loss(p):
+            return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+        l0 = float(loss(params))
+        for step in range(200):
+            g = jax.grad(loss)(params)
+            params, state = opt.update(g, state, params, jnp.asarray(step))
+        assert float(loss(params)) < l0 * 1e-2
+
+    def test_adamw_weight_decay_shrinks(self):
+        opt = adamw(lr=0.0, weight_decay=0.0)  # lr=0: nothing moves
+        params = quad_params()
+        state = opt.init(params)
+        g = jax.tree_util.tree_map(jnp.zeros_like, params)
+        p2, _ = opt.update(g, state, params, jnp.asarray(0))
+        np.testing.assert_allclose(np.asarray(p2["w"]), np.asarray(params["w"]))
+
+    def test_adafactor_factored_state_shape(self):
+        opt = adafactor()
+        params = {"m": jnp.zeros((8, 16)), "v": jnp.zeros((5,))}
+        st = opt.init(params)
+        assert st["m"]["vr"].shape == (8,)
+        assert st["m"]["vc"].shape == (16,)
+        assert st["v"]["v"].shape == (5,)
+
+    def test_cosine_schedule(self):
+        lr = cosine_schedule(1e-3, warmup=10, total=100)
+        assert float(lr(jnp.asarray(0))) == 0.0
+        assert float(lr(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-5)
+        assert float(lr(jnp.asarray(100))) == pytest.approx(1e-4, rel=1e-3)
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        cfg = get_smoke_config("olmo_1b")
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        opt = make_optimizer("adamw", lr=1e-3)
+        state = init_train_state(params, opt)
+        step = jax.jit(make_train_step(cfg, opt))
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                         cfg.vocab_size),
+        }
+        batch["labels"] = batch["tokens"]
+        losses = []
+        for _ in range(12):
+            state, metrics = step(state, batch)  # same batch -> must overfit
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0]
+        assert int(state["step"]) == 12
+
+    def test_grad_accum_matches_full_batch(self):
+        """accum=2 over a batch == accum=1 on the same batch (same grads
+        modulo accumulation-order float error)."""
+        import dataclasses
+
+        cfg = get_smoke_config("phi3_mini_3_8b")
+        cfg1 = dataclasses.replace(cfg, grad_accum=1, dtype="float32")
+        cfg2 = dataclasses.replace(cfg, grad_accum=2, dtype="float32")
+        params = M.init_params(jax.random.PRNGKey(2), cfg)
+        opt = make_optimizer("adamw", lr=1e-3)
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(3), (4, 16), 0,
+                                         cfg.vocab_size)
+        }
+        batch["labels"] = batch["tokens"]
+        s1, m1 = make_train_step(cfg1, opt)(init_train_state(params, opt), batch)
+        s2, m2 = make_train_step(cfg2, opt)(init_train_state(params, opt), batch)
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=5e-3)
+        # Parameters end up close (not identical: per-microbatch mean vs
+        # global mean weighting is equivalent only for equal-sized micros,
+        # which holds here, so they should be very close).
+        for a, b in zip(jax.tree_util.tree_leaves(s1["params"]),
+                        jax.tree_util.tree_leaves(s2["params"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=5e-2, atol=5e-4)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_manifest(self):
+        tree = {
+            "a": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "b": np.asarray(7, np.int32),
+        }
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            save_checkpoint(path, tree, step=42)
+            man = checkpoint_manifest(path)
+            assert man["step"] == 42
+            like = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype), tree
+            )
+            out = restore_checkpoint(path, like)
+            np.testing.assert_array_equal(out["a"]["w"], tree["a"]["w"])
+            assert out["b"] == 7
+
+    def test_shape_mismatch_raises(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            save_checkpoint(path, {"w": np.zeros((2, 2))})
+            bad = {"w": jax.ShapeDtypeStruct((3, 2), np.float32)}
+            with pytest.raises(ValueError):
+                restore_checkpoint(path, bad)
+
+    def test_missing_key_raises(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            save_checkpoint(path, {"w": np.zeros((2,))})
+            with pytest.raises(KeyError):
+                restore_checkpoint(
+                    path,
+                    {"w": jax.ShapeDtypeStruct((2,), np.float32),
+                     "v": jax.ShapeDtypeStruct((2,), np.float32)},
+                )

@@ -1,0 +1,67 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Bisect train_4k memory: forward only vs grad vs full step."""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "/root/repo/src")
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import param_specs, train_batch_specs
+from repro.configs.base import INPUT_SHAPES
+from repro.models import model as M
+from repro.sharding.policy import make_policy
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "internvl2_76b"
+mode = sys.argv[2] if len(sys.argv) > 2 else "fwd"
+
+cfg = get_config(arch)
+shape = INPUT_SHAPES["train_4k"]
+mesh = make_production_mesh()
+policy = make_policy(mesh, cfg)
+p_shapes = param_specs(cfg)
+p_shard = policy.params_shardings(p_shapes)
+batch = train_batch_specs(cfg, shape)
+accum = cfg.grad_accum
+
+
+def micro(b):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct((a.shape[0] // accum, *a.shape[1:]), a.dtype), b
+    )
+
+
+mb = micro(batch)
+
+if mode == "fwd":
+    fn = lambda p, b: M.forward_train(p, b, cfg)["loss"]
+elif mode == "fwd_noremat":
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, remat=False)
+    fn = lambda p, b: M.forward_train(p, b, cfg2)["loss"]
+elif mode == "grad":
+    fn = lambda p, b: jax.grad(lambda pp: M.forward_train(pp, b, cfg)["loss"])(p)
+elif mode == "grad_nobranch":
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, branch_layers=(), use_mtp=False)
+    fn = lambda p, b: jax.grad(lambda pp: M.forward_train(pp, b, cfg2)["loss"])(p)
+else:
+    raise SystemExit(f"unknown mode {mode}")
+
+from repro.sharding.ctx import activation_sharding
+with mesh, activation_sharding(mesh, ("data",)):
+    lowered = jax.jit(
+        fn, in_shardings=(p_shard, policy.data_shardings(mb))
+    ).lower(p_shapes, mb)
+    c = lowered.compile()
+    ma = c.memory_analysis()
+    print(
+        f"{arch} {mode}: arg={ma.argument_size_in_bytes/1e9:.2f} "
+        f"out={ma.output_size_in_bytes/1e9:.2f} temp={ma.temp_size_in_bytes/1e9:.2f} GB"
+    )
