@@ -22,7 +22,12 @@ from repro.core.calibration import (
 )
 from repro.core.dag import DagCostModel, DagNode, chain_as_dag, min_cut_partition
 from repro.core.graph import Graph, build_partition_graph
-from repro.core.multitier import MultiTierPlan, TierSpec, solve_multitier
+from repro.core.multitier import (
+    MultiTierPlan,
+    TierSpec,
+    expected_time_multitier,
+    solve_multitier,
+)
 from repro.core.latency import expected_time, expected_time_all_splits, plan_from_split
 from repro.core.partitioner import Partitioner, build_cost_profile
 from repro.core.profiler import (
@@ -68,6 +73,7 @@ __all__ = [
     "TierSpec",
     "MultiTierPlan",
     "solve_multitier",
+    "expected_time_multitier",
     "dijkstra",
     "shortest_path_plan",
     "brute_force_split",

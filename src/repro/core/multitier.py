@@ -25,7 +25,12 @@ import numpy as np
 
 from repro.core.types import CostProfile
 
-__all__ = ["TierSpec", "MultiTierPlan", "solve_multitier"]
+__all__ = [
+    "TierSpec",
+    "MultiTierPlan",
+    "solve_multitier",
+    "expected_time_multitier",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +135,44 @@ def solve_multitier(
         expected_time_s=best_cost,
         tier_of_layer=tuple(tier_of_layer[1:]),
     )
+
+
+def expected_time_multitier(
+    t_c: np.ndarray,
+    alpha: np.ndarray,
+    branch_probs: np.ndarray,
+    tiers: list[TierSpec],
+    cuts: tuple[int, ...],
+) -> float:
+    """Closed-form E[T] of one *fixed* monotone cut vector (the plan the
+    runtime executes), same semantics as :func:`solve_multitier`: branches
+    run on tiers 0..K-2 (reach-weighted), the last tier's tail is frozen at
+    the wire survival, and a hop is charged iff layers still run after it.
+    """
+    t_c = np.asarray(t_c, float)
+    alpha = np.asarray(alpha, float)
+    p = np.asarray(branch_probs, float)
+    n = len(t_c) - 1
+    k = len(tiers)
+    if len(cuts) != k - 1:
+        raise ValueError(f"need {k - 1} cuts for {k} tiers, got {cuts}")
+    bounds = (0, *(int(c) for c in cuts), n)
+    if any(b > a for a, b in zip(bounds[1:], bounds[:-1])):
+        raise ValueError(f"cuts must be non-decreasing in [0, {n}]: {cuts}")
+
+    surv = np.cumprod(1.0 - p)
+    reach = np.concatenate([[1.0], surv[:-1]])
+    cost = 0.0
+    for j in range(k):
+        lo, hi = bounds[j], bounds[j + 1]
+        for i in range(lo + 1, hi + 1):
+            w = reach[bounds[k - 1]] if (j == k - 1 and k > 1) else reach[i]
+            cost += w * tiers[j].gamma * t_c[i]
+    for j in range(k - 1):
+        c = bounds[j + 1]
+        if c < n:  # layers still run downstream -> the hop really happens
+            cost += reach[c] * alpha[c] * 8.0 / tiers[j].uplink_bps
+    return float(cost)
 
 
 def from_cost_profile(profile: CostProfile, tiers: list[TierSpec]) -> MultiTierPlan:

@@ -88,12 +88,22 @@ def _parse_computations(hlo: str):
 
 
 def _operand_shapes(line: str, shapes: dict) -> list[tuple[str, str]]:
-    """Typed shapes of an instruction's operands via the local name map."""
-    m = re.search(r"\w+\(([^)]*)\)", line)
+    """Typed shapes of an instruction's operands.
+
+    Optimized HLO types every operand inline (``dot(f32[4,256] %a, ...)``),
+    so the typed shapes inside the first paren group are authoritative;
+    name-map lookup is the fallback for untyped (older-style) operand
+    lists.  Splitting must not happen on commas — shapes contain them.
+    """
+    m = re.search(r"[\w\-]+\(([^)]*)", line)
     if not m:
         return []
+    args = m.group(1)
+    typed = _SHAPE_RE.findall(args)
+    if typed:
+        return typed
     out = []
-    for tok in m.group(1).split(","):
+    for tok in args.split(","):
         nm = tok.strip().lstrip("%")
         if nm in shapes:
             out.append(shapes[nm])
@@ -112,7 +122,8 @@ def _dot_flops(line: str, shapes: dict) -> float:
         if d:
             out_elems *= int(d)
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-    ops = _operand_shapes(line.split(" dot(", 1)[0] + " dot(" + line.split(" dot(", 1)[1], shapes)
+    # Operand list only (strip the result type left of " dot(").
+    ops = _operand_shapes("dot(" + line.split(" dot(", 1)[1], shapes)
     lhs_shape = None
     if ops:
         lhs_shape = [int(d) for d in ops[0][1].split(",") if d]

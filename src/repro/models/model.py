@@ -53,6 +53,7 @@ __all__ = [
     "forward_train",
     "prefill",
     "decode_step",
+    "embed_decode",
     "trunk_layout",
     "softmax_xent",
     "compute_dtype",
@@ -495,6 +496,19 @@ def prefill(
     return logits, new_caches
 
 
+def embed_decode(
+    params: Params, token: jax.Array, positions: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Embed one decode-step token (B, 1) — the entry point of whichever
+    tier holds trunk layer 1 in a partitioned deployment."""
+    dtype = compute_dtype(cfg)
+    h = embed(params["embed"], token, dtype)
+    if cfg.arch_type == "audio":
+        # RoPE-free decoder: add the absolute sinusoidal embedding at `pos`.
+        h = h + sinusoidal_embed(positions, cfg.d_model).astype(dtype)[None]
+    return h
+
+
 def decode_step(
     params: Params,
     token: jax.Array,  # (B, 1) int32
@@ -508,12 +522,8 @@ def decode_step(
 ) -> dict[str, Any]:
     """One decode step.  Returns logits, per-branch entropies/exit masks
     (the paper's confidence test at each side branch), and updated caches."""
-    dtype = compute_dtype(cfg)
-    h = embed(params["embed"], token, dtype)
     positions = pos[None].astype(jnp.int32)
-    if cfg.arch_type == "audio":
-        # RoPE-free decoder: add the absolute sinusoidal embedding at `pos`.
-        h = h + sinusoidal_embed(positions, cfg.d_model).astype(dtype)[None]
+    h = embed_decode(params, token, positions, cfg)
 
     collect = cfg.branch_layers if with_branches else ()
     h2, new_caches, _, collected = run_trunk(

@@ -1,1 +1,35 @@
-"""repro.serving — see module docstrings."""
+"""repro.serving — BranchyNet serving on the unified K-tier runtime.
+
+    TierExecutor / TierSegment   device-resident exit/transfer core
+    ServingEngine                K=1 (monolithic, calibration source)
+    PartitionedServer            K=2 (the paper's edge/cloud system)
+    MultiTierServer              K>=3 (lattice plans from core.multitier)
+    RepartitionController        live p_k -> solver -> hot swap
+"""
+
+from repro.serving.controller import RepartitionController
+from repro.serving.engine import ExitStats, ServingEngine
+from repro.serving.multitier import MultiTierServer, MultiTierStepReport
+from repro.serving.partitioned import PartitionedServer, StepReport
+from repro.serving.tiers import (
+    TierExecutor,
+    TierSegment,
+    TierStepResult,
+    bytes_per_sequence,
+    segments_for_cuts,
+)
+
+__all__ = [
+    "ExitStats",
+    "ServingEngine",
+    "PartitionedServer",
+    "StepReport",
+    "MultiTierServer",
+    "MultiTierStepReport",
+    "RepartitionController",
+    "TierExecutor",
+    "TierSegment",
+    "TierStepResult",
+    "bytes_per_sequence",
+    "segments_for_cuts",
+]

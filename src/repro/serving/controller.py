@@ -1,0 +1,63 @@
+"""Repartition controller: live exit statistics -> solver -> hot swap.
+
+The paper's loop (Sec. IV-C): exit probabilities are an input-data
+property, so the deployment estimates them online and re-runs the
+partition optimizer whenever they (or the network) drift.  This module
+closes that loop against the unified tier runtime:
+
+    ExitStats.conditional_probs() -> Partitioner / solve_multitier
+        -> PartitionedServer.set_split / MultiTierServer.install_cuts
+
+Swaps go through ``TierExecutor.install``, which re-uses the compiled
+function of every tier segment whose (layer range, branches) is unchanged
+— repartitioning never pays a full re-jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.multitier import TierSpec, solve_multitier
+from repro.core.partitioner import Partitioner
+from repro.core.types import CostProfile
+from repro.serving.engine import ExitStats
+from repro.serving.multitier import MultiTierServer
+from repro.serving.partitioned import PartitionedServer
+
+__all__ = ["RepartitionController"]
+
+
+@dataclasses.dataclass
+class RepartitionController:
+    """Feeds measured ``p_k`` back through the solver and installs the
+    result on a 2-tier or K-tier server."""
+
+    server: PartitionedServer | MultiTierServer
+    profile: CostProfile
+    tiers: list[TierSpec] | None = None  # required for MultiTierServer
+
+    def __post_init__(self):
+        if isinstance(self.server, MultiTierServer) and self.tiers is None:
+            self.tiers = list(self.server.tiers)
+
+    def solve(self, p_k: np.ndarray) -> tuple[int, ...]:
+        """Optimal cut vector for the profile with live exit probs."""
+        prof = Partitioner(self.profile).with_exit_probs(p_k).profile
+        if isinstance(self.server, MultiTierServer):
+            plan = solve_multitier(
+                prof.t_c, prof.alpha, prof.branch_exit_probs(), self.tiers
+            )
+            return plan.cut_after
+        return (Partitioner(prof).solve().split_layer,)
+
+    def update(self, stats: ExitStats) -> tuple[int, ...]:
+        """Re-solve from live stats and hot-swap the split if it moved.
+        Returns the installed cut vector."""
+        cuts = self.solve(stats.conditional_probs())
+        if isinstance(self.server, MultiTierServer):
+            self.server.install_cuts(cuts)
+            return self.server.cuts
+        self.server.set_split(cuts[0])
+        return (self.server.split_layer,)

@@ -1,10 +1,16 @@
 """Batched serving engine with BranchyNet early exits.
 
-The engine owns the jitted prefill/decode closures, tracks positions, and
-records per-branch exit statistics — the live measurement that calibrates
-the partitioner's ``p_k`` (paper Sec. IV-C: "the probability that a sample
-is classified at the side branch" is an input-data property, so a serving
-system must estimate it online).
+The engine owns the jitted prefill closure and a single-tier
+:class:`~repro.serving.tiers.TierExecutor` (the K=1 configuration of the
+unified runtime: one segment spanning the whole trunk, every side branch
+evaluated in place).  It tracks positions and records per-branch exit
+statistics — the live measurement that calibrates the partitioner's
+``p_k`` (paper Sec. IV-C: "the probability that a sample is classified at
+the side branch" is an input-data property, so a serving system must
+estimate it online).
+
+Exit masking runs device-resident inside the fused decode step; the loop
+performs one host sync per decoded token (down from 3 per branch).
 """
 
 from __future__ import annotations
@@ -19,6 +25,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.calibration import calibrate_exit_probs
 from repro.models import model as M
+from repro.serving.tiers import TierExecutor, segments_for_cuts
 
 __all__ = ["ServingEngine", "ExitStats"]
 
@@ -63,11 +70,7 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda params, inputs, caches: M.prefill(params, inputs, cfg, caches)
         )
-        self._decode = jax.jit(
-            lambda params, tok, pos, caches: M.decode_step(
-                params, tok, pos, caches, cfg
-            )
-        )
+        self._exec = TierExecutor(cfg, self.params, segments_for_cuts(cfg, ()))
 
     def start(self, inputs: dict) -> dict:
         """Prefill a batch of prompts; returns mutable serve state."""
@@ -95,6 +98,7 @@ class ServingEngine:
         """
         cfg = self.cfg
         k = len(cfg.branch_layers)
+        batch = state["batch"]
         counts = np.zeros(k + 1, dtype=np.int64)
         ents_log: list[np.ndarray] = []
         toks_out = []
@@ -103,31 +107,26 @@ class ServingEngine:
         caches = state["caches"]
         pos = state["pos"]
         for _ in range(steps):
-            out = self._decode(self.params, tok, jnp.asarray(pos, jnp.int32), caches)
-            caches = out["caches"]
+            res, caches = self._exec.step(tok, pos, caches)
             pos += 1
-
-            main_tok = jnp.argmax(out["logits"], -1).astype(jnp.int32)
-            chosen = main_tok
-            exited = jnp.zeros(main_tok.shape, bool)
-            step_ents = []
             for j, layer in enumerate(cfg.branch_layers):
-                e = out["branch_entropy"][layer]
-                step_ents.append(np.asarray(e))
-                b_tok = jnp.argmax(out["branch_logits"][layer], -1).astype(jnp.int32)
-                take = out["branch_exit"][layer] & ~exited
-                chosen = jnp.where(take, b_tok, chosen)
-                counts[j] += int(np.asarray(take).sum())
-                exited = exited | out["branch_exit"][layer]
-            counts[k] += int(np.asarray(~exited).sum())
-            ents_log.append(np.stack(step_ents) if step_ents else np.zeros((0, state["batch"])))
-
-            tok = chosen[:, None]
-            toks_out.append(np.asarray(chosen))
+                counts[j] += int(res.branch_take[layer].sum())
+            counts[k] += int((~res.exited).sum())
+            ents_log.append(
+                np.stack([res.branch_entropy[l] for l in cfg.branch_layers])
+                if k else np.zeros((0, batch))
+            )
+            toks_out.append(res.tokens)
+            tok = res.tokens_dev[:, None]
 
         state["caches"] = caches
         state["pos"] = pos
-        state["last_logits"] = out["logits"]
+        state["last_logits"] = res.last_logits
         return np.stack(toks_out, axis=1), ExitStats(
             cfg.branch_layers, counts, ents_log
         )
+
+    @property
+    def host_syncs(self) -> int:
+        """Device->host syncs performed by decode steps so far."""
+        return self._exec.host_syncs

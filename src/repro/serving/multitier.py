@@ -1,0 +1,121 @@
+"""K-tier BranchyNet serving (beyond-paper; executes core.multitier plans).
+
+The paper's deployment has one bandwidth cliff; real fleets have several
+(device -> edge server -> regional cloud -> core cloud).  The lattice
+solver in :mod:`repro.core.multitier` already picks the optimal monotone
+layer->tier assignment; this server *executes* it on the unified
+:class:`~repro.serving.tiers.TierExecutor` runtime: one jitted segment per
+tier, device-resident exit masking, survivors shipped across every hop,
+and per-hop byte accounting against each :class:`TierSpec`'s uplink.
+
+With K=2 this is exactly the paper's ``PartitionedServer`` (tests assert
+token- and byte-level equivalence).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.multitier import MultiTierPlan, TierSpec, expected_time_multitier
+from repro.serving.tiers import TierExecutor, segments_for_cuts
+
+__all__ = ["MultiTierServer", "MultiTierStepReport"]
+
+
+@dataclasses.dataclass
+class MultiTierStepReport:
+    tokens: np.ndarray  # (B,)
+    exit_tier: np.ndarray  # (B,) int32: tier of the first exit, -1 = head
+    exited: np.ndarray  # (B,) bool
+    shipped_per_hop: tuple[int, ...]  # survivors crossing each hop
+    bytes_per_hop: tuple[float, ...]
+    transfer_s_per_hop: tuple[float, ...]  # bytes * 8 / uplink_bps per hop
+    est_latency_s: float | None  # lattice cost model at the installed cuts
+
+
+@dataclasses.dataclass
+class MultiTierServer:
+    cfg: ModelConfig
+    params: Any
+    tiers: Sequence[TierSpec]
+    cuts: tuple[int, ...]  # layer after which each hop happens (K-1,)
+    cost: tuple[np.ndarray, np.ndarray] | None = None  # (t_c, alpha) estimates
+
+    def __post_init__(self):
+        self.tiers = tuple(self.tiers)
+        self.cuts = tuple(int(c) for c in self.cuts)
+        if len(self.cuts) != len(self.tiers) - 1:
+            raise ValueError(
+                f"{len(self.tiers)} tiers need {len(self.tiers) - 1} cuts, "
+                f"got {self.cuts}"
+            )
+        self.executor = TierExecutor(
+            self.cfg, self.params, self._segments(self.cuts)
+        )
+
+    @classmethod
+    def from_plan(
+        cls,
+        cfg: ModelConfig,
+        params: Any,
+        plan: MultiTierPlan,
+        tiers: Sequence[TierSpec],
+        cost: tuple[np.ndarray, np.ndarray] | None = None,
+    ) -> "MultiTierServer":
+        return cls(cfg, params, tiers, plan.cut_after, cost)
+
+    def _segments(self, cuts: tuple[int, ...]):
+        return segments_for_cuts(
+            self.cfg, cuts,
+            names=tuple(t.name for t in self.tiers),
+            uplinks=tuple(t.uplink_bps for t in self.tiers),
+        )
+
+    def install_cuts(self, cuts: Sequence[int]) -> None:
+        """Hot-swap the hop points; unchanged tier segments keep their
+        compiled functions (no re-jit)."""
+        cuts = tuple(int(c) for c in cuts)
+        if cuts == self.cuts:
+            return
+        self.executor.install(self._segments(cuts))
+        self.cuts = cuts
+
+    # ------------------------------------------------------------------
+    def step(
+        self, tok: jax.Array, pos: int, caches: Any
+    ) -> tuple[MultiTierStepReport, Any]:
+        res, caches = self.executor.step(tok, pos, caches)
+        transfer = tuple(
+            nb * 8.0 / self.tiers[j].uplink_bps
+            for j, nb in enumerate(res.bytes_per_hop)
+        )
+        rep = MultiTierStepReport(
+            tokens=res.tokens,
+            exit_tier=res.exit_tier,
+            exited=res.exited,
+            shipped_per_hop=res.shipped_per_hop,
+            bytes_per_hop=res.bytes_per_hop,
+            transfer_s_per_hop=transfer,
+            est_latency_s=self._estimate(res),
+        )
+        return rep, caches
+
+    def _estimate(self, res) -> float | None:
+        """Lattice cost model (core.multitier) at the installed cuts with
+        the *measured* per-branch exit fractions substituted for p."""
+        if self.cost is None:
+            return None
+        t_c, alpha = self.cost
+        p = np.zeros(len(t_c))
+        batch = res.tokens.shape[0]
+        alive = float(batch)
+        for layer in sorted(res.branch_take):
+            took = float(res.branch_take[layer].sum())
+            p[layer] = took / alive if alive > 0 else 0.0
+            alive -= took
+        return expected_time_multitier(t_c, alpha, p, list(self.tiers), self.cuts)

@@ -1,6 +1,7 @@
 """Partitioned (edge/cloud) BranchyNet serving — the paper's system.
 
-Executes a decode step split at the plan's partition layer ``v_s``:
+A thin 2-tier configuration of :class:`~repro.serving.tiers.TierExecutor`.
+One decode step splits at the plan's partition layer ``v_s``:
 
   edge tier : embed + trunk layers [0, s) + the side branches before the
               cut.  Sequences whose branch entropy clears the threshold
@@ -14,8 +15,10 @@ Executes a decode step split at the plan's partition layer ``v_s``:
 
 On one host this is a simulation of the two tiers (both run locally), but
 the tier boundary is real in the compiled program: edge/cloud are two
-separate jitted functions with an explicit tensor handoff, which is the
-same structure a real edge deployment lowers.
+separate jitted segment functions with an explicit tensor handoff, which
+is the same structure a real edge deployment lowers.  ``set_split`` swaps
+the cut at runtime; a segment whose (layer range, branches) is unchanged
+re-uses its compiled function.
 """
 
 from __future__ import annotations
@@ -24,22 +27,12 @@ import dataclasses
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.types import CostProfile, NetworkProfile, PartitionPlan
-from repro.models import model as M
-from repro.models.layers import norm_apply
-from repro.models.model import (
-    _branch_logits,
-    _embed_inputs,
-    _unembed,
-    compute_dtype,
-    run_trunk,
-    trunk_layout,
-)
-from repro.models.layers import embed, sinusoidal_embed
+from repro.core.latency import expected_time
+from repro.core.types import CostProfile, NetworkProfile
+from repro.serving.tiers import TierExecutor, segments_for_cuts
 
 __all__ = ["PartitionedServer", "StepReport"]
 
@@ -62,136 +55,49 @@ class PartitionedServer:
     cost_profile: CostProfile | None = None  # for latency estimates
 
     def __post_init__(self):
-        cfg = self.cfg
-        s = self.split_layer
-        total = sum(n for _, _, n in trunk_layout(cfg))
-        assert 0 <= s <= total
-        edge_branches = tuple(b for b in cfg.branch_layers if b < s) if s else ()
+        self.executor = TierExecutor(
+            self.cfg, self.params, self._segments(self.split_layer)
+        )
 
-        def edge_step(params, tok, pos, caches):
-            dtype = compute_dtype(cfg)
-            h = embed(params["embed"], tok, dtype)
-            positions = pos[None].astype(jnp.int32)
-            if cfg.arch_type == "audio":
-                h = h + sinusoidal_embed(positions, cfg.d_model).astype(dtype)[None]
-            h, caches2, _, collected = run_trunk(
-                params, h, cfg, positions, caches,
-                layer_range=(0, s), collect=edge_branches,
-            )
-            bl = _branch_logits(params, collected, cfg)
-            out = {"hidden": h, "caches": caches2}
-            out["branch_logits"] = {k: v[:, 0] for k, v in bl.items()}
-            return out
+    def _segments(self, s: int):
+        return segments_for_cuts(
+            self.cfg, (s,), names=("edge", "cloud"),
+            uplinks=(self.network.bandwidth_bps,) if self.network else None,
+        )
 
-        def cloud_step(params, hidden, pos, caches):
-            positions = pos[None].astype(jnp.int32)
-            h, caches2, _, _ = run_trunk(
-                params, hidden, cfg, positions, caches, layer_range=(s, total),
-            )
-            hF = norm_apply(cfg.norm_type, params["final_norm"], h)
-            return {"logits": _unembed(params, hF, cfg)[:, 0], "caches": caches2}
-
-        self._edge = jax.jit(edge_step) if s > 0 else None
-        self._cloud = jax.jit(cloud_step) if s < total else None
-        self._edge_branches = edge_branches
-        self._total = total
-
-        # Edge-only: the deepest branch plus the final head both live on the
-        # edge; emit from the final head (all layers are local anyway).
-        if s == total:
-            def edge_full(params, tok, pos, caches):
-                out = M.decode_step(params, tok, pos, caches, cfg)
-                return out
-            self._edge_full = jax.jit(edge_full)
+    def set_split(self, split_layer: int) -> None:
+        """Hot-swap the cut; unchanged tier segments are not re-jitted."""
+        if split_layer == self.split_layer:
+            return
+        self.executor.install(self._segments(split_layer))
+        self.split_layer = split_layer
 
     # ------------------------------------------------------------------
     def step(self, tok: jax.Array, pos: int, caches: Any) -> tuple[StepReport, Any]:
-        cfg = self.cfg
-        s = self.split_layer
-        d = cfg.d_model
-        posj = jnp.asarray(pos, jnp.int32)
-        bytes_per_seq = d * 2.0  # bf16 residual stream
-
-        if s == 0:
-            # Cloud-only: ship the raw token id (alpha_0 == a few bytes; the
-            # paper's raw-input upload is the prompt, which happened at
-            # prefill time — per-step transfer is the token id).
-            out = M.decode_step(self.params, tok, posj, caches, cfg,
-                                with_branches=False)
-            toks = np.asarray(jnp.argmax(out["logits"], -1).astype(jnp.int32))
-            rep = StepReport(
-                tokens=toks,
-                exited_on_edge=np.zeros(toks.shape[0], bool),
-                shipped=toks.shape[0],
-                bytes_shipped=4.0 * toks.shape[0],
-                est_latency_s=self._estimate(0, 0.0),
-            )
-            return rep, out["caches"]
-
-        if s == self._total:
-            out = self._edge_full(self.params, tok, posj, caches)
-            main_tok = jnp.argmax(out["logits"], -1).astype(jnp.int32)
-            chosen, exited = self._apply_exits(out, main_tok)
-            rep = StepReport(
-                tokens=np.asarray(chosen),
-                exited_on_edge=np.asarray(exited),
-                shipped=0,
-                bytes_shipped=0.0,
-                est_latency_s=self._estimate(s, float(np.mean(np.asarray(exited)))),
-            )
-            return rep, out["caches"]
-
-        eout = self._edge(self.params, tok, posj, caches)
-        exited = jnp.zeros(tok.shape[0], bool)
-        chosen = jnp.zeros(tok.shape[0], jnp.int32)
-        for layer in self._edge_branches:
-            logits = eout["branch_logits"][layer]
-            from repro.core.calibration import normalized_entropy
-
-            e = normalized_entropy(logits)
-            take = (e < cfg.exit_threshold) & ~exited
-            chosen = jnp.where(take, jnp.argmax(logits, -1).astype(jnp.int32), chosen)
-            exited = exited | take
-
-        cout = self._cloud(self.params, eout["hidden"], posj, eout["caches"])
-        main_tok = jnp.argmax(cout["logits"], -1).astype(jnp.int32)
-        chosen = jnp.where(exited, chosen, main_tok)
-
-        exited_np = np.asarray(exited)
-        shipped = int((~exited_np).sum())
+        res, caches = self.executor.step(tok, pos, caches)
+        shipped = res.shipped_per_hop[0] if res.shipped_per_hop else 0
+        nbytes = res.bytes_per_hop[0] if res.bytes_per_hop else 0.0
         rep = StepReport(
-            tokens=np.asarray(chosen),
-            exited_on_edge=exited_np,
+            tokens=res.tokens,
+            exited_on_edge=res.exited,
             shipped=shipped,
-            bytes_shipped=shipped * bytes_per_seq,
-            est_latency_s=self._estimate(s, float(exited_np.mean())),
+            bytes_shipped=nbytes,
+            est_latency_s=self._estimate(
+                self.split_layer, float(res.exited.mean())
+            ),
         )
-        return rep, cout["caches"]
-
-    def _apply_exits(self, out, main_tok):
-        cfg = self.cfg
-        chosen = main_tok
-        exited = jnp.zeros(main_tok.shape, bool)
-        for layer in cfg.branch_layers:
-            b_tok = jnp.argmax(out["branch_logits"][layer], -1).astype(jnp.int32)
-            take = out["branch_exit"][layer] & ~exited
-            chosen = jnp.where(take, b_tok, chosen)
-            exited = exited | take
-        return chosen, exited
+        return rep, caches
 
     def _estimate(self, s: int, exit_frac: float) -> float | None:
         """Paper Eq. 5 evaluated at this split with the *measured* exit
         fraction substituted for p (closing the calibration loop)."""
         if self.cost_profile is None:
             return None
-        import dataclasses as dc
-
-        from repro.core.latency import expected_time
-
         prof = self.cost_profile
         if prof.branches and exit_frac > 0:
             branches = tuple(
-                dc.replace(b, exit_prob=min(exit_frac, 1.0)) for b in prof.branches
+                dataclasses.replace(b, exit_prob=min(exit_frac, 1.0))
+                for b in prof.branches
             )
-            prof = dc.replace(prof, branches=branches)
+            prof = dataclasses.replace(prof, branches=branches)
         return expected_time(prof, s)

@@ -1,0 +1,314 @@
+"""Unified K-tier execution runtime for BranchyNet serving.
+
+One decode step crosses up to K tiers (device -> edge -> ... -> cloud).
+Every tier runs a contiguous trunk segment, evaluates the side branches
+that live strictly inside it, and ships survivors across its uplink.  The
+monolithic :class:`~repro.serving.engine.ServingEngine` (K=1), the paper's
+:class:`~repro.serving.partitioned.PartitionedServer` (K=2) and the
+beyond-paper :class:`~repro.serving.multitier.MultiTierServer` (K>=3) are
+all thin configurations of the same :class:`TierExecutor`.
+
+Branch placement follows the paper's semantics (Sec. IV-B, Fig. 2(c)):
+
+  * a branch sitting exactly at a cut is discarded — the residual stream
+    ships immediately;
+  * the final tier evaluates no side branches (the cloud classifies at the
+    output layer), except in the single-tier case where the whole
+    BranchyNet runs in one place.
+
+Exit masking is device-resident: branch entropy thresholding, token
+selection, and survivor accounting are fused in jnp inside each tier's
+jitted segment, and the step performs exactly ONE device->host sync — a
+single ``jax.device_get`` of the packed (tokens, exit masks, entropies)
+pytree.  The old per-branch ``np.asarray``/``int(...)`` round trips inside
+the decode loop are gone; ``TierExecutor.host_syncs`` counts the remaining
+fetches so benchmarks/tests can assert the invariant.
+
+Segment functions are cached by their spec ``(layer_lo, layer_hi,
+branches, head)``: a repartition that moves one cut re-uses the jitted
+(and XLA-compiled) callables of every unchanged tier segment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.calibration import normalized_entropy
+from repro.models.layers import norm_apply
+from repro.models.model import (
+    _branch_logits,
+    _unembed,
+    embed_decode,
+    run_trunk,
+    trunk_layout,
+)
+
+__all__ = [
+    "TierSegment",
+    "TierStepResult",
+    "TierExecutor",
+    "segments_for_cuts",
+    "bytes_per_sequence",
+    "TOKEN_ID_BYTES",
+]
+
+#: Per-sequence payload of a hop taken before any trunk layer ran: the raw
+#: token id (the prompt itself crossed at prefill time).
+TOKEN_ID_BYTES = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSegment:
+    """One tier's share of the trunk: layers ``[layer_lo, layer_hi)``
+    (absolute, 0-based), the 1-based branch collect points it evaluates,
+    and the uplink to the next tier (bits/s; ``None`` on the last tier)."""
+
+    name: str
+    layer_lo: int
+    layer_hi: int
+    branches: tuple[int, ...] = ()
+    uplink_bps: float | None = None
+
+    @property
+    def is_empty(self) -> bool:
+        return self.layer_hi == self.layer_lo
+
+    def spec(self, head: bool) -> tuple:
+        """Cache key for the compiled segment function."""
+        return (self.layer_lo, self.layer_hi, self.branches, head)
+
+
+def bytes_per_sequence(cfg: ModelConfig, cut_layer: int) -> float:
+    """Payload one surviving sequence ships at a cut after ``cut_layer``
+    (1-based; 0 = before any trunk layer -> raw token id)."""
+    if cut_layer == 0:
+        return TOKEN_ID_BYTES
+    return cfg.d_model * 2.0  # bf16 residual stream
+
+
+def segments_for_cuts(
+    cfg: ModelConfig,
+    cuts: Sequence[int],
+    *,
+    names: Sequence[str] | None = None,
+    uplinks: Sequence[float] | None = None,
+) -> tuple[TierSegment, ...]:
+    """Generic plan -> runtime adapter: monotone 1-based cut points
+    ``(c_1 .. c_{K-1})`` become K :class:`TierSegment` specs.
+
+    Tier j runs layers ``(c_j, c_{j+1}]`` (1-based).  Branch placement per
+    the module docstring: strictly inside a tier, never on the final tier
+    of a K>=2 stack, and a branch at a cut is discarded.
+    """
+    total = sum(n for _, _, n in trunk_layout(cfg))
+    bounds = (0, *(int(c) for c in cuts), total)
+    if any(b > a for a, b in zip(bounds[1:], bounds[:-1])):
+        raise ValueError(f"cuts must be non-decreasing in [0, {total}]: {cuts}")
+    k = len(bounds) - 1
+    segs = []
+    for j in range(k):
+        lo, hi = bounds[j], bounds[j + 1]
+        if j == k - 1 and k > 1:
+            brs: tuple[int, ...] = ()  # the cloud evaluates no branches
+        else:
+            # Strict at the cut (branch there is discarded); at the trunk
+            # end there is no cut, so the deepest branch is evaluated.
+            brs = tuple(
+                b for b in cfg.branch_layers
+                if lo < b and (b <= hi if hi == total else b < hi)
+            )
+        name = names[j] if names else f"tier{j}"
+        up = uplinks[j] if uplinks and j < len(uplinks) else None
+        segs.append(TierSegment(name, lo, hi, brs, up if j < k - 1 else None))
+    return tuple(segs)
+
+
+@dataclasses.dataclass
+class TierStepResult:
+    """Everything a server needs from one decode step, fetched in one
+    device->host sync (except the device-resident feedback arrays)."""
+
+    tokens: np.ndarray  # (B,) chosen token per sequence
+    exited: np.ndarray  # (B,) bool — exited at some side branch
+    exit_tier: np.ndarray  # (B,) int32 tier index of the exit, -1 = main head
+    branch_take: dict[int, np.ndarray]  # layer -> (B,) bool first-exit mask
+    branch_entropy: dict[int, np.ndarray]  # layer -> (B,) normalized entropy
+    shipped_per_hop: tuple[int, ...]  # survivors crossing each executed hop
+    bytes_per_hop: tuple[float, ...]
+    tokens_dev: jax.Array  # device copy for the next step's input
+    last_logits: jax.Array  # (B, V) main-head logits, device-resident
+
+
+class TierExecutor:
+    """Compiles one jitted segment per tier and runs the K-hop decode step.
+
+    ``install`` swaps the segment list in place; segment functions are
+    cached by spec so an unchanged tier is never re-jitted.
+    """
+
+    def __init__(
+        self, cfg: ModelConfig, params: Any, segments: Sequence[TierSegment]
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.total_layers = sum(n for _, _, n in trunk_layout(cfg))
+        self._fn_cache: dict[tuple, Any] = {}
+        self.host_syncs = 0
+        self.install(segments)
+
+    # -------------------------------------------------------------- plan
+    def install(self, segments: Sequence[TierSegment]) -> None:
+        """Install a new tier plan, re-using compiled unchanged segments."""
+        segments = tuple(segments)
+        if not segments or segments[0].layer_lo != 0:
+            raise ValueError("first segment must start at layer 0")
+        if segments[-1].layer_hi != self.total_layers:
+            raise ValueError("last segment must end at the trunk tail")
+        for a, b in zip(segments, segments[1:]):
+            if a.layer_hi != b.layer_lo:
+                raise ValueError("segments must tile the trunk contiguously")
+        self.segments = segments
+        # The final head runs on the last tier that runs any layers.
+        self._head_idx = max(
+            i for i, s in enumerate(segments) if not s.is_empty
+        )
+        self._fns = [
+            self._segment_fn(seg, head=(i == self._head_idx))
+            if not seg.is_empty else None
+            for i, seg in enumerate(segments)
+        ]
+
+    def segment_fn(self, index: int):
+        """The compiled callable for segment ``index`` (None if empty)."""
+        return self._fns[index]
+
+    def _segment_fn(self, seg: TierSegment, head: bool):
+        key = seg.spec(head)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        cfg = self.cfg
+        lo, hi, branches = seg.layer_lo, seg.layer_hi, seg.branches
+
+        def fn(params, x, pos, exited, chosen, caches):
+            positions = pos[None].astype(jnp.int32)
+            h = embed_decode(params, x, positions, cfg) if lo == 0 else x
+            h, caches, _, collected = run_trunk(
+                params, h, cfg, positions, caches,
+                layer_range=(lo, hi), collect=branches,
+            )
+            bl = _branch_logits(params, collected, cfg)
+            batch = x.shape[0]
+            takes, ents = [], []
+            for layer in branches:
+                logits_b = bl[layer][:, 0]
+                e = normalized_entropy(logits_b)
+                take = (e < cfg.exit_threshold) & ~exited
+                chosen = jnp.where(
+                    take, jnp.argmax(logits_b, -1).astype(jnp.int32), chosen
+                )
+                exited = exited | take
+                takes.append(take)
+                ents.append(e)
+            out = {
+                "caches": caches,
+                "exited": exited,
+                "chosen": chosen,
+                "take": jnp.stack(takes) if takes
+                else jnp.zeros((0, batch), bool),
+                "ents": jnp.stack(ents) if ents
+                else jnp.zeros((0, batch), jnp.float32),
+            }
+            if head:
+                hF = norm_apply(cfg.norm_type, params["final_norm"], h)
+                logits = _unembed(params, hF, cfg)[:, 0]
+                out["logits"] = logits
+                out["chosen"] = jnp.where(
+                    exited, chosen, jnp.argmax(logits, -1).astype(jnp.int32)
+                )
+                out["caches"] = dict(out["caches"])
+                out["caches"]["length"] = caches["length"] + 1
+            else:
+                out["hidden"] = h
+            return out
+
+        jitted = jax.jit(fn)
+        self._fn_cache[key] = jitted
+        return jitted
+
+    # -------------------------------------------------------------- step
+    def step(self, tok: jax.Array, pos, caches: Any) -> tuple[TierStepResult, Any]:
+        """One decode step across all tiers: exactly one host sync."""
+        cfg = self.cfg
+        batch = tok.shape[0]
+        posj = jnp.asarray(pos, jnp.int32)
+        exited = jnp.zeros((batch,), bool)
+        chosen = jnp.zeros((batch,), jnp.int32)
+        x: jax.Array = tok
+        fetch: dict[str, Any] = {}
+        seg_branches: list[tuple[int, tuple[int, ...]]] = []
+        logits = None
+
+        for i, seg in enumerate(self.segments):
+            fn = self._fns[i]
+            if fn is None:
+                continue
+            out = fn(self.params, x, posj, exited, chosen, caches)
+            caches = out["caches"]
+            exited, chosen = out["exited"], out["chosen"]
+            if seg.branches:
+                fetch[f"take{i}"] = out["take"]
+                fetch[f"ents{i}"] = out["ents"]
+                seg_branches.append((i, seg.branches))
+            if i == self._head_idx:
+                logits = out["logits"]
+            else:
+                x = out["hidden"]
+
+        fetch["tokens"] = chosen
+        fetch["exited"] = exited
+        host = jax.device_get(fetch)  # the step's single device->host sync
+        self.host_syncs += 1
+
+        # Host-side bookkeeping on the fetched masks (no further syncs).
+        exit_tier = np.full((batch,), -1, np.int32)
+        branch_take: dict[int, np.ndarray] = {}
+        branch_entropy: dict[int, np.ndarray] = {}
+        for i, layers in seg_branches:
+            for row, layer in enumerate(layers):
+                mask = host[f"take{i}"][row]
+                branch_take[layer] = mask
+                branch_entropy[layer] = host[f"ents{i}"][row]
+                exit_tier[mask] = i
+        exited_run = np.zeros((batch,), bool)
+        alive_after_seg = {}
+        for i, seg in enumerate(self.segments):
+            for layer in seg.branches:
+                exited_run |= branch_take[layer]
+            alive_after_seg[i] = int(batch - exited_run.sum())
+
+        # Hops: one per cut that still has layers (or the head) downstream.
+        shipped, nbytes = [], []
+        for j in range(self._head_idx):
+            cut = self.segments[j].layer_hi
+            alive = alive_after_seg[j]
+            shipped.append(alive)
+            nbytes.append(alive * bytes_per_sequence(cfg, cut))
+
+        result = TierStepResult(
+            tokens=host["tokens"],
+            exited=host["exited"],
+            exit_tier=exit_tier,
+            branch_take=branch_take,
+            branch_entropy=branch_entropy,
+            shipped_per_hop=tuple(shipped),
+            bytes_per_hop=tuple(nbytes),
+            tokens_dev=chosen,
+            last_logits=logits,
+        )
+        return result, caches

@@ -1,0 +1,365 @@
+"""Unified K-tier runtime (serving/tiers.py): segment planning rules,
+tier-count equivalences (K=1 engine vs monolithic decode, K=2 MultiTier vs
+PartitionedServer), single-host-sync invariant, per-hop byte accounting,
+and the repartition controller's no-re-jit hot swap."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    BranchSpec,
+    CostProfile,
+    LayerCost,
+    NetworkProfile,
+    build_cost_profile,
+    shortest_path_plan,
+)
+from repro.core.multitier import TierSpec, expected_time_multitier, solve_multitier
+from repro.models import model as M
+from repro.serving import (
+    MultiTierServer,
+    PartitionedServer,
+    RepartitionController,
+    ServingEngine,
+    segments_for_cuts,
+)
+
+
+@pytest.fixture(scope="module")
+def deep_model():
+    """4 trunk layers, branches after v_1 and v_3 — enough structure for
+    K=3 cuts and branch-at-cut cases."""
+    cfg = dataclasses.replace(
+        get_smoke_config("phi3_mini_3_8b"), num_layers=4, branch_layers=(1, 3)
+    )
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _toks(cfg, batch=4, seed=2):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (batch, 1), 0, cfg.vocab_size
+    )
+
+
+class TestSegmentPlanning:
+    def test_two_tier_matches_paper_semantics(self, deep_model):
+        cfg, _ = deep_model
+        edge, cloud = segments_for_cuts(cfg, (3,))
+        assert (edge.layer_lo, edge.layer_hi) == (0, 3)
+        assert edge.branches == (1,)  # branch at the cut (3) is discarded
+        assert (cloud.layer_lo, cloud.layer_hi) == (3, 4)
+        assert cloud.branches == ()  # the cloud evaluates no branches
+
+    def test_edge_only_keeps_all_branches(self, deep_model):
+        cfg, _ = deep_model
+        edge, cloud = segments_for_cuts(cfg, (4,))
+        assert edge.branches == (1, 3)  # no cut -> deepest branch evaluated
+        assert cloud.is_empty
+
+    def test_single_tier_is_monolithic_branchynet(self, deep_model):
+        cfg, _ = deep_model
+        (seg,) = segments_for_cuts(cfg, ())
+        assert (seg.layer_lo, seg.layer_hi) == (0, 4)
+        assert seg.branches == cfg.branch_layers
+
+    def test_three_tier_partition(self, deep_model):
+        cfg, _ = deep_model
+        d, e, c = segments_for_cuts(cfg, (1, 3))
+        assert d.branches == ()  # branch 1 sits exactly at the first cut
+        assert e.branches == ()  # branch 3 sits exactly at the second cut
+        d, e, c = segments_for_cuts(cfg, (2, 4))
+        assert d.branches == (1,) and e.branches == (3,) and c.is_empty
+
+    def test_rejects_non_monotone_cuts(self, deep_model):
+        cfg, _ = deep_model
+        with pytest.raises(ValueError):
+            segments_for_cuts(cfg, (3, 1))
+        with pytest.raises(ValueError):
+            segments_for_cuts(cfg, (5,))
+
+
+def _random_chain(rng, n):
+    """Random (t_c, alpha, p) chain with up to two branches (mirrors
+    test_multitier.random_chain, hypothesis-free so it always runs)."""
+    t_c = np.concatenate([[0.0], rng.uniform(1e-4, 1e-1, n)])
+    alpha = rng.uniform(1e2, 1e6, n + 1)
+    p = np.zeros(n + 1)
+    if n > 2:
+        for i in rng.choice(np.arange(1, n), size=min(2, n - 1), replace=False):
+            p[i] = rng.uniform(0, 1)
+    return t_c, alpha, p
+
+
+class TestSolverEquivalence:
+    """Plain seeded randomized sweeps (no hypothesis dependency) so these
+    run in every tier-1 environment."""
+
+    def test_k2_cuts_match_dijkstra(self):
+        """The lattice DP at K=2 lands on the same cut (and E[T]) as the
+        paper's Dijkstra run over G'_BDNN."""
+        rng = np.random.default_rng(7)
+        for _ in range(60):
+            n = int(rng.integers(2, 13))
+            gamma = float(rng.uniform(1.0, 500.0))
+            bw = float(rng.uniform(1e5, 1e9))
+            t_c, alpha, p = _random_chain(rng, n)
+            plan = solve_multitier(
+                t_c, alpha, p,
+                [TierSpec("edge", gamma, bw), TierSpec("cloud", 1.0)],
+            )
+            branches = tuple(
+                BranchSpec(i, float(p[i])) for i in range(1, n) if p[i] > 0
+            )
+            prof = CostProfile(
+                t_c=t_c, alpha=alpha, branches=branches, gamma=gamma,
+                network=NetworkProfile("t", bw),
+            )
+            ref = shortest_path_plan(prof)
+            assert plan.expected_time_s == pytest.approx(
+                ref.expected_time_s, rel=1e-9, abs=1e-12
+            )
+            assert plan.cut_after == (ref.split_layer,)
+
+    def test_solver_optimum_is_min_over_fixed_cuts(self):
+        """solve_multitier's E[T] equals the minimum of the closed-form
+        fixed-cut cost (the estimate the runtime reports) over all cuts."""
+        rng = np.random.default_rng(11)
+        tiers = [TierSpec("device", 200.0, 1e6), TierSpec("edge", 20.0, 2e7),
+                 TierSpec("cloud", 1.0)]
+        for _ in range(40):
+            n = int(rng.integers(2, 9))
+            t_c, alpha, p = _random_chain(rng, n)
+            plan = solve_multitier(t_c, alpha, p, tiers)
+            best = min(
+                expected_time_multitier(t_c, alpha, p, tiers, (s1, s2))
+                for s1 in range(n + 1) for s2 in range(s1, n + 1)
+            )
+            assert plan.expected_time_s == pytest.approx(
+                best, rel=1e-9, abs=1e-12
+            )
+            assert expected_time_multitier(
+                t_c, alpha, p, tiers, plan.cut_after
+            ) == pytest.approx(plan.expected_time_s, rel=1e-9, abs=1e-12)
+
+
+class TestTierEquivalence:
+    """Identical computation regardless of how many tiers execute it."""
+
+    @pytest.mark.parametrize("split", [0, 1, 2, 3, 4])
+    def test_multitier_k2_matches_partitioned(self, deep_model, split):
+        cfg, params = deep_model
+        tok = _toks(cfg)
+        p2 = PartitionedServer(cfg, params, split)
+        k2 = MultiTierServer(
+            cfg, params, [TierSpec("edge", 25.0, 5.85e6), TierSpec("cloud", 1.0)],
+            (split,),
+        )
+        rep, _ = p2.step(tok, 0, M.init_caches(cfg, 4, 32))
+        mrep, _ = k2.step(tok, 0, M.init_caches(cfg, 4, 32))
+        np.testing.assert_array_equal(mrep.tokens, rep.tokens)
+        np.testing.assert_array_equal(mrep.exited, rep.exited_on_edge)
+        assert sum(mrep.shipped_per_hop) == rep.shipped
+        assert sum(mrep.bytes_per_hop) == rep.bytes_shipped
+
+    def test_multitier_k2_matches_partitioned_with_exits(self, deep_model):
+        cfg, params = deep_model
+        cfg = dataclasses.replace(cfg, exit_threshold=1.5)  # everyone exits
+        tok = _toks(cfg)
+        p2 = PartitionedServer(cfg, params, 2)
+        k2 = MultiTierServer(
+            cfg, params, [TierSpec("e", 25.0, 1e7), TierSpec("c", 1.0)], (2,)
+        )
+        rep, _ = p2.step(tok, 0, M.init_caches(cfg, 4, 32))
+        mrep, _ = k2.step(tok, 0, M.init_caches(cfg, 4, 32))
+        assert rep.exited_on_edge.all() and mrep.exited.all()
+        np.testing.assert_array_equal(mrep.tokens, rep.tokens)
+        assert mrep.shipped_per_hop == (0,) and rep.shipped == 0
+        assert (mrep.exit_tier == 0).all()
+
+    def test_k3_survivors_match_monolithic_tokens(self, deep_model):
+        cfg, params = deep_model
+        tok = _toks(cfg)
+        caches = M.init_caches(cfg, 4, 32)
+        mono = M.decode_step(params, tok, jnp.asarray(0, jnp.int32), caches, cfg)
+        mono_tok = np.asarray(jnp.argmax(mono["logits"], -1))
+
+        srv = MultiTierServer(
+            cfg, params,
+            [TierSpec("device", 200.0, 1e6), TierSpec("edge", 20.0, 2e7),
+             TierSpec("cloud", 1.0)],
+            (2, 3),
+        )
+        rep, _ = srv.step(tok, 0, M.init_caches(cfg, 4, 32))
+        crossed = ~rep.exited
+        np.testing.assert_array_equal(rep.tokens[crossed], mono_tok[crossed])
+
+    def test_engine_matches_legacy_decode_loop(self, deep_model):
+        """The fused device-resident exit masking reproduces the old
+        per-branch host-round-trip loop token for token."""
+        cfg, params = deep_model
+        engine = ServingEngine(cfg, params, context_len=64)
+        prompts = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(5), (3, 8), 0, cfg.vocab_size)}
+        state = engine.start(prompts)
+        toks, stats = engine.decode(state, steps=5)
+
+        # Legacy loop: monolithic decode_step + host-side branch folding.
+        state2 = engine.start(prompts)
+        tok = jnp.argmax(state2["last_logits"], -1).astype(jnp.int32)[:, None]
+        caches, pos = state2["caches"], state2["pos"]
+        legacy = []
+        counts = np.zeros(len(cfg.branch_layers) + 1, np.int64)
+        for _ in range(5):
+            out = M.decode_step(params, tok, jnp.asarray(pos, jnp.int32),
+                                caches, cfg)
+            caches, pos = out["caches"], pos + 1
+            chosen = jnp.argmax(out["logits"], -1).astype(jnp.int32)
+            exited = jnp.zeros(chosen.shape, bool)
+            for j, layer in enumerate(cfg.branch_layers):
+                b_tok = jnp.argmax(out["branch_logits"][layer], -1).astype(jnp.int32)
+                take = out["branch_exit"][layer] & ~exited
+                chosen = jnp.where(take, b_tok, chosen)
+                counts[j] += int(np.asarray(take).sum())
+                exited = exited | out["branch_exit"][layer]
+            counts[-1] += int(np.asarray(~exited).sum())
+            legacy.append(np.asarray(chosen))
+            tok = chosen[:, None]
+        np.testing.assert_array_equal(toks, np.stack(legacy, axis=1))
+        np.testing.assert_array_equal(stats.counts, counts)
+
+
+class TestHostSyncs:
+    def test_one_sync_per_partitioned_step(self, deep_model):
+        cfg, params = deep_model
+        srv = PartitionedServer(cfg, params, 2)
+        caches = M.init_caches(cfg, 4, 32)
+        tok = _toks(cfg)
+        for i in range(4):
+            rep, caches = srv.step(tok, i, caches)
+            tok = jnp.asarray(rep.tokens[:, None])
+        assert srv.executor.host_syncs == 4
+
+    def test_one_sync_per_engine_step(self, deep_model):
+        cfg, params = deep_model
+        engine = ServingEngine(cfg, params, context_len=64)
+        state = engine.start({"tokens": jax.random.randint(
+            jax.random.PRNGKey(8), (2, 4), 0, cfg.vocab_size)})
+        engine.decode(state, steps=6)
+        assert engine.host_syncs == 6
+
+
+class TestByteAccounting:
+    def test_k3_per_hop_bytes(self, deep_model):
+        cfg, params = deep_model
+        tiers = [TierSpec("d", 100.0, 1e6), TierSpec("e", 10.0, 1e7),
+                 TierSpec("c", 1.0)]
+        srv = MultiTierServer(cfg, params, tiers, (2, 3))
+        rep, _ = srv.step(_toks(cfg), 0, M.init_caches(cfg, 4, 32))
+        assert len(rep.shipped_per_hop) == 2
+        per_seq = cfg.d_model * 2.0
+        assert rep.bytes_per_hop == (
+            rep.shipped_per_hop[0] * per_seq, rep.shipped_per_hop[1] * per_seq
+        )
+        # Survivors never resurrect across hops.
+        assert rep.shipped_per_hop[0] >= rep.shipped_per_hop[1]
+        # Transfer time is bytes over the *hop's own* uplink.
+        assert rep.transfer_s_per_hop == (
+            rep.bytes_per_hop[0] * 8.0 / tiers[0].uplink_bps,
+            rep.bytes_per_hop[1] * 8.0 / tiers[1].uplink_bps,
+        )
+
+    def test_cloud_only_ships_token_ids(self, deep_model):
+        cfg, params = deep_model
+        srv = MultiTierServer(
+            cfg, params, [TierSpec("e", 25.0, 1e7), TierSpec("c", 1.0)], (0,)
+        )
+        rep, _ = srv.step(_toks(cfg), 0, M.init_caches(cfg, 4, 32))
+        assert rep.shipped_per_hop == (4,)
+        assert rep.bytes_per_hop == (16.0,)  # 4 sequences * 4-byte token id
+
+    def test_trailing_empty_tiers_ship_nothing(self, deep_model):
+        cfg, params = deep_model
+        srv = MultiTierServer(
+            cfg, params,
+            [TierSpec("d", 100.0, 1e6), TierSpec("e", 10.0, 1e7),
+             TierSpec("c", 1.0)],
+            (4, 4),
+        )
+        rep, _ = srv.step(_toks(cfg), 0, M.init_caches(cfg, 4, 32))
+        assert rep.shipped_per_hop == () and rep.bytes_per_hop == ()
+
+
+class TestRepartition:
+    def test_swap_reuses_unchanged_segments(self, deep_model):
+        cfg, params = deep_model
+        srv = MultiTierServer(
+            cfg, params,
+            [TierSpec("d", 100.0, 1e6), TierSpec("e", 10.0, 1e7),
+             TierSpec("c", 1.0)],
+            (1, 3),
+        )
+        cloud_fn = srv.executor.segment_fn(2)
+        srv.install_cuts((2, 3))  # move only the first cut
+        assert srv.executor.segment_fn(2) is cloud_fn  # cloud never re-jitted
+        # Swapping back re-uses both previously compiled edge segments too.
+        device_fn = srv.executor.segment_fn(0)
+        srv.install_cuts((1, 3))
+        srv.install_cuts((2, 3))
+        assert srv.executor.segment_fn(0) is device_fn
+
+    def test_controller_closes_the_loop(self, deep_model):
+        cfg, params = deep_model
+        engine = ServingEngine(cfg, params, context_len=64)
+        state = engine.start({"tokens": jax.random.randint(
+            jax.random.PRNGKey(9), (4, 6), 0, cfg.vocab_size)})
+        _, stats = engine.decode(state, steps=3)
+
+        costs = [LayerCost(f"l{i}", 0, 0, cfg.d_model * 2.0, 1e-3)
+                 for i in range(cfg.num_layers)]
+        profile = build_cost_profile(
+            costs, cfg.branch_layers, stats.conditional_probs(), "3g", 50.0,
+            64.0,
+        )
+        srv = PartitionedServer(cfg, params, 0, cost_profile=profile)
+        ctl = RepartitionController(srv, profile)
+        cuts = ctl.update(stats)
+        assert len(cuts) == 1 and 0 <= cuts[0] <= cfg.num_layers
+        assert srv.split_layer == cuts[0]
+        rep, _ = srv.step(_toks(cfg), 0, M.init_caches(cfg, 4, 32))
+        assert rep.tokens.shape == (4,)
+
+    def test_controller_multitier(self, deep_model):
+        cfg, params = deep_model
+        engine = ServingEngine(cfg, params, context_len=64)
+        state = engine.start({"tokens": jax.random.randint(
+            jax.random.PRNGKey(10), (4, 6), 0, cfg.vocab_size)})
+        _, stats = engine.decode(state, steps=3)
+
+        costs = [LayerCost(f"l{i}", 0, 0, cfg.d_model * 2.0, 1e-3)
+                 for i in range(cfg.num_layers)]
+        profile = build_cost_profile(
+            costs, cfg.branch_layers, stats.conditional_probs(), "3g", 50.0,
+            64.0,
+        )
+        tiers = [TierSpec("d", 50.0, 1e6), TierSpec("e", 10.0, 1e7),
+                 TierSpec("c", 1.0)]
+        srv = MultiTierServer(cfg, params, tiers, (0, 0),
+                              cost=(profile.t_c, profile.alpha))
+        ctl = RepartitionController(srv, profile, tiers)
+        cuts = ctl.update(stats)
+        assert len(cuts) == 2 and cuts[0] <= cuts[1] <= cfg.num_layers
+        rep, _ = srv.step(_toks(cfg), 0, M.init_caches(cfg, 4, 32))
+        assert rep.est_latency_s is not None and rep.est_latency_s > 0
+        if not rep.exited.any():
+            # No live exits -> the report's estimate is exactly the lattice
+            # cost model at p == 0.
+            zero_p = np.zeros(cfg.num_layers + 1)
+            assert rep.est_latency_s == pytest.approx(expected_time_multitier(
+                profile.t_c, profile.alpha, zero_p, tiers, srv.cuts
+            ))

@@ -1,0 +1,6 @@
+#!/bin/sh
+# Tier-1 CI entry: run the test suite exactly as ROADMAP.md specifies.
+# Usage: tools/ci.sh [extra pytest args]
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
