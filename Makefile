@@ -1,16 +1,20 @@
 PY := python
 
-.PHONY: test test-fast bench-serving example
+.PHONY: test test-fast bench-serving bench-serving-fast example
 
 # Tier-1 verify (ROADMAP): the full suite with the src layout on the path.
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 test-fast:
-	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_tiers.py tests/test_multitier.py tests/test_hlo_analysis.py
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_tiers.py tests/test_compaction.py tests/test_multitier.py tests/test_hlo_analysis.py
 
 bench-serving:
 	PYTHONPATH=src $(PY) benchmarks/serving_step.py
+
+# CI smoke: one batch/split/regime cell, short step counts.
+bench-serving-fast:
+	REPRO_BENCH_FAST=1 PYTHONPATH=src $(PY) benchmarks/serving_step.py
 
 example:
 	PYTHONPATH=src $(PY) examples/serve_partitioned.py

@@ -149,6 +149,12 @@ def main() -> None:
               f"(matches plan alpha)")
     print(f"   last step est E[T]={rep3.est_latency_s * 1e3:.2f} ms/sample, "
           f"exit tiers {np.bincount(rep3.exit_tier + 1, minlength=len(tiers) + 1)}")
+    # Survivor compaction: each downstream tier ran a dense sub-batch
+    # padded to the bucket ladder, not the masked full batch.
+    for j, hop in enumerate(rep3.compaction):
+        print(f"   hop {j}: {hop.survivors} survivors -> bucket {hop.bucket} "
+              f"({hop.padded_waste} padding rows), "
+              f"{srv3.executor.overflow_retries} overflow retries total")
 
 
 if __name__ == "__main__":

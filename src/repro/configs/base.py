@@ -138,25 +138,34 @@ class ModelConfig:
     def ssm_inner(self) -> int:
         return self.ssm_expand * self.d_model
 
+    def attn_matmul_params(self) -> int:
+        """Matmul parameters of one attention block (GQA or MLA) — the
+        single source for num_params/active_params and the serving
+        benchmarks' per-row decode FLOPs (2 FLOPs per MAC)."""
+        d = self.d_model
+        if self.arch_type not in ("dense", "moe", "vlm", "audio", "hybrid"):
+            return 0
+        if self.use_mla:
+            return (
+                d * self.mla_q_rank
+                + self.mla_q_rank * self.num_heads * self.head_dim
+                + d * (self.mla_kv_rank + self.mla_rope_dim)
+                + self.mla_kv_rank * self.num_heads * (self.head_dim + self.head_dim)
+                + self.num_heads * self.head_dim * d
+            )
+        return d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+
+    def dense_mlp_matmul_params(self) -> int:
+        """Matmul parameters of one dense MLP block."""
+        return (3 if self.mlp_type == "swiglu" else 2) * self.d_model * self.d_ff
+
     def num_params(self) -> int:
         """Approximate parameter count (embeddings + trunk), for roofline's
         MODEL_FLOPS = 6*N*D and memory budgeting."""
         d, ff, v = self.d_model, self.d_ff, self.vocab_size
         emb = v * d * (1 if self.tie_embeddings else 2)
         per_layer = 0
-        if self.arch_type in ("dense", "moe", "vlm", "audio", "hybrid"):
-            if self.use_mla:
-                attn = (
-                    d * self.mla_q_rank
-                    + self.mla_q_rank * self.num_heads * self.head_dim
-                    + d * (self.mla_kv_rank + self.mla_rope_dim)
-                    + self.mla_kv_rank * self.num_heads * (self.head_dim + self.head_dim)
-                    + self.num_heads * self.head_dim * d
-                )
-            else:
-                attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
-        else:
-            attn = 0
+        attn = self.attn_matmul_params()
         if self.arch_type == "moe":
             shared = 3 * d * self.moe_d_ff * self.num_shared_experts
             routed = 3 * d * self.moe_d_ff * self.num_experts
@@ -184,7 +193,7 @@ class ModelConfig:
             shared_attn = attn + 3 * d * ff  # one shared block, counted once
             trunk = self.num_layers * mamba + shared_attn
         else:
-            mlp = (3 if self.mlp_type == "swiglu" else 2) * d * ff
+            mlp = self.dense_mlp_matmul_params()
             trunk = self.num_layers * (attn + mlp)
             if self.is_encoder_decoder:
                 # encoder layers + decoder cross-attention
@@ -196,15 +205,7 @@ class ModelConfig:
         if self.arch_type != "moe":
             return self.num_params()
         d = self.d_model
-        attn = (
-            d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
-            if not self.use_mla
-            else d * self.mla_q_rank
-            + self.mla_q_rank * self.num_heads * self.head_dim
-            + d * (self.mla_kv_rank + self.mla_rope_dim)
-            + self.mla_kv_rank * self.num_heads * 2 * self.head_dim
-            + self.num_heads * self.head_dim * d
-        )
+        attn = self.attn_matmul_params()
         active_mlp = 3 * d * self.moe_d_ff * (
             self.experts_per_token + self.num_shared_experts
         )

@@ -20,6 +20,8 @@ With K == 2 this reduces to the paper's problem; tests assert agreement.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import math
 
 import numpy as np
 
@@ -30,7 +32,35 @@ __all__ = [
     "MultiTierPlan",
     "solve_multitier",
     "expected_time_multitier",
+    "bucket_ladder",
+    "bucket_for",
 ]
+
+
+# ------------------------------------------------------------ bucket ladder
+def bucket_ladder(batch: int) -> tuple[int, ...]:
+    """Static jit shapes the compacted runtime pads survivor sub-batches
+    to: powers of two below ``batch``, plus ``batch`` itself (a no-exit
+    step compacts through the identity permutation at full width)."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    out = []
+    b = 1
+    while b < batch:
+        out.append(b)
+        b *= 2
+    out.append(batch)
+    return tuple(out)
+
+
+def bucket_for(n: int, batch: int) -> int:
+    """Smallest ladder bucket that fits ``n`` survivors (min 1: even an
+    all-exit step keeps one padding row downstream so per-layer cache
+    write indices stay in lockstep across tiers)."""
+    for b in bucket_ladder(batch):
+        if b >= max(int(n), 1):
+            return b
+    return batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,12 +80,66 @@ class MultiTierPlan:
     tier_of_layer: tuple[int, ...]  # (N,) tier index per layer
 
 
+def _padded_frac(reach_i: float, batch: int) -> float:
+    """Fraction of the full batch a downstream tier actually computes on:
+    expected survivors rounded up to the runtime's bucket ladder."""
+    n = int(np.ceil(reach_i * batch - 1e-9))
+    return bucket_for(n, batch) / batch
+
+
+#: Above this many candidate cut vectors the bucketed solve falls back to
+#: the (approximate) lattice DP instead of exact enumeration.
+_BUCKETED_ENUM_CAP = 50_000
+
+
+def _solve_bucketed_exact(t_c, alpha, p, tiers, batch) -> "MultiTierPlan | None":
+    """Exact bucketed solve: argmin over monotone cut vectors of the
+    entry-frozen closed form.  Returns None when the enumeration would
+    exceed ``_BUCKETED_ENUM_CAP`` (caller falls back to the DP)."""
+    n = len(t_c) - 1
+    k = len(tiers)
+    if k == 1:
+        cost = expected_time_multitier(t_c, alpha, p, tiers, (), batch=batch)
+        return MultiTierPlan((), cost, tuple([0] * n))
+    if math.comb(n + k - 1, k - 1) > _BUCKETED_ENUM_CAP:
+        return None
+    best_cost, best_cuts = np.inf, None
+    for cuts in itertools.combinations_with_replacement(range(n + 1), k - 1):
+        c = expected_time_multitier(t_c, alpha, p, tiers, cuts, batch=batch)
+        if c < best_cost:
+            best_cost, best_cuts = c, cuts
+    bounds = (0, *best_cuts, n)
+    tier_of_layer: list[int] = []
+    for j in range(k):
+        tier_of_layer += [j] * (bounds[j + 1] - bounds[j])
+    return MultiTierPlan(tuple(best_cuts), float(best_cost), tuple(tier_of_layer))
+
+
 def solve_multitier(
     t_c: np.ndarray,  # (N+1,) cloud-reference per-layer times, [0] == 0
     alpha: np.ndarray,  # (N+1,) output bytes, [0] == raw input
     branch_probs: np.ndarray,  # (N+1,) conditional exit prob per layer
     tiers: list[TierSpec],
+    batch: int | None = None,
 ) -> MultiTierPlan:
+    """``batch=None`` is the paper's ideal per-sample model: every layer's
+    cost is weighted by the probability the sample still runs it.
+
+    ``batch`` given models the *survivor-compacted batched runtime*: the
+    entry tier — the first tier that runs any layer, wherever it sits —
+    computes the full batch (exits inside a tier are masked, not skipped),
+    and each downstream tier computes a survivor sub-batch padded to the
+    bucket ladder, frozen at tier entry.  Because "which tier is entry"
+    and "what bucket a tier froze" are properties of the whole cut vector,
+    not of a (layer, tier) lattice state, the bucketed solve enumerates
+    cut vectors directly against :func:`expected_time_multitier` — exact
+    by construction, and K (fleet depth) keeps the combinatorics tiny.
+    Only above ``_BUCKETED_ENUM_CAP`` candidate vectors does it fall back
+    to the lattice DP with *pointwise* padded stay weights (full batch on
+    tier 0), a documented approximation.  Hop transfer is always
+    reach-weighted: the wire ships true survivors, padding is a
+    compute-shape artifact.
+    """
     t_c = np.asarray(t_c, float)
     alpha = np.asarray(alpha, float)
     p = np.asarray(branch_probs, float)
@@ -63,8 +147,18 @@ def solve_multitier(
     k = len(tiers)
     assert k >= 1
 
+    if batch is not None:
+        plan = _solve_bucketed_exact(t_c, alpha, p, tiers, batch)
+        if plan is not None:
+            return plan
+
     surv = np.cumprod(1.0 - p)  # surv[i] = alive after layer i's branch
     reach = np.concatenate([[1.0], surv[:-1]])  # alive entering layer i
+
+    def stay_w(i: int, j: int) -> float:
+        if batch is None:
+            return reach[i]
+        return 1.0 if j == 0 else _padded_frac(reach[i], batch)
 
     # Branch semantics (paper Sec. IV-B): side branches run on every tier
     # EXCEPT the last (the cloud evaluates none), and the branch sitting
@@ -85,7 +179,7 @@ def solve_multitier(
             parent[0][j] = (0, j - 1)
     for i in range(1, n + 1):
         for j in range(last):
-            cand = dist[i - 1][j] + reach[i] * tiers[j].gamma * t_c[i]
+            cand = dist[i - 1][j] + stay_w(i, j) * tiers[j].gamma * t_c[i]
             if cand < dist[i][j]:
                 dist[i][j] = cand
                 parent[i][j] = (i - 1, j)
@@ -104,15 +198,17 @@ def solve_multitier(
                 best_cost, best_i, end_on_last = float(dist[n][j]), n, False
                 best_j_final = j
         for i in range(0, n + 1):
-            hop = dist[i][last - 1] + reach[i] * (
-                alpha[i] * 8.0 / tiers[last - 1].uplink_bps
-                + tiers[last].gamma * tail[i]
+            tail_w = reach[i] if batch is None else _padded_frac(reach[i], batch)
+            hop = dist[i][last - 1] + (
+                reach[i] * alpha[i] * 8.0 / tiers[last - 1].uplink_bps
+                + tail_w * tiers[last].gamma * tail[i]
             )
             if hop < best_cost:
                 best_cost, best_i, end_on_last = float(hop), i, True
                 best_j_final = last - 1
-    else:  # single tier: everything runs there
-        best_cost = float(np.sum(reach[1:] * tiers[0].gamma * t_c[1:]))
+    else:  # single tier: everything runs there (full batch when bucketed)
+        w1 = reach[1:] if batch is None else np.ones(n)
+        best_cost = float(np.sum(w1 * tiers[0].gamma * t_c[1:]))
         best_i, end_on_last, best_j_final = n, False, 0
 
     # Backtrack the branchy-tier assignment up to best_i.
@@ -143,11 +239,18 @@ def expected_time_multitier(
     branch_probs: np.ndarray,
     tiers: list[TierSpec],
     cuts: tuple[int, ...],
+    batch: int | None = None,
 ) -> float:
     """Closed-form E[T] of one *fixed* monotone cut vector (the plan the
     runtime executes), same semantics as :func:`solve_multitier`: branches
     run on tiers 0..K-2 (reach-weighted), the last tier's tail is frozen at
     the wire survival, and a hop is charged iff layers still run after it.
+
+    ``batch`` given switches to the survivor-compacted runtime's cost: the
+    entry tier computes the full batch, and every later tier computes the
+    bucket its entering survivors were padded to — *frozen at tier entry*
+    (the runtime recompacts only at hops), so this is exact for the
+    executed plan, padding waste included.  Transfers stay reach-weighted.
     """
     t_c = np.asarray(t_c, float)
     alpha = np.asarray(alpha, float)
@@ -162,11 +265,15 @@ def expected_time_multitier(
 
     surv = np.cumprod(1.0 - p)
     reach = np.concatenate([[1.0], surv[:-1]])
+    entry = next((j for j in range(k) if bounds[j] < bounds[j + 1]), None)
     cost = 0.0
     for j in range(k):
         lo, hi = bounds[j], bounds[j + 1]
         for i in range(lo + 1, hi + 1):
-            w = reach[bounds[k - 1]] if (j == k - 1 and k > 1) else reach[i]
+            if batch is None:
+                w = reach[bounds[k - 1]] if (j == k - 1 and k > 1) else reach[i]
+            else:
+                w = 1.0 if j == entry else _padded_frac(reach[lo], batch)
             cost += w * tiers[j].gamma * t_c[i]
     for j in range(k - 1):
         c = bounds[j + 1]

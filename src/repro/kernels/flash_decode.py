@@ -5,7 +5,18 @@ The decode hot loop attends one query against a (ring) KV cache of up to
 tiles with the online-softmax accumulator, fusing slot-validity and
 sliding-window masking (the paper's long-context serving path).
 
-Layout: q (B, H, D) grouped as (B, K, G, D); cache (B, C, K, D).
+Layout: q (B, H, D) grouped as (B, K, G, D); cache (Bc, C, K, D) where the
+cache batch Bc may exceed the query batch B.  Slot validity ``k_pos`` is
+per sequence, (Bc, C) (a shared (C,) vector is broadcast by the wrapper):
+the survivor-compacted tier runtime leaves holes (-1) in rows that skipped
+a step downstream of their exit.
+
+Survivor compaction: ``rows`` (B,) maps query row i -> cache row rows[i].
+It is a *scalar-prefetch* operand (pltpu.PrefetchScalarGridSpec), so the
+block index maps read it before the body runs and DMA only the survivor
+rows of the full-batch cache — a dense sub-batch attends in-place against
+the resident cache with zero gather copies.
+
 Grid: (B, K, C_tiles) — the cache dim is the sequential inner loop; each
 (batch, kv-head) pair owns its accumulator scratch.  Tiles are
 (block_c, D) with D padded to the 128 lane width by the wrapper; the
@@ -28,11 +39,12 @@ NEG_INF = -1e30
 
 
 def _kernel(
+    rows_ref,  # (B,) SMEM scalar-prefetch: query row -> cache row
+    qpos_ref,  # (1,) SMEM scalar-prefetch: query position
     q_ref,  # (1, 1, G, D)
     k_ref,  # (1, block_c, 1, D)
     v_ref,  # (1, block_c, 1, D)
-    pos_ref,  # (block_c,)  int32 slot positions
-    qpos_ref,  # (1, 1) SMEM: query position
+    pos_ref,  # (1, block_c)  int32 per-sequence slot positions
     o_ref,  # (1, 1, G, D) out
     m_scr,  # (G,) scratch
     l_scr,  # (G,)
@@ -53,8 +65,8 @@ def _kernel(
     q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D)
     k = k_ref[0, :, 0].astype(jnp.float32)  # (bc, D)
     v = v_ref[0, :, 0].astype(jnp.float32)  # (bc, D)
-    kpos = pos_ref[...]  # (bc,)
-    qpos = qpos_ref[0, 0]
+    kpos = pos_ref[0, :]  # (bc,)
+    qpos = qpos_ref[0]
 
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -86,50 +98,70 @@ def _kernel(
 )
 def flash_decode_pallas(
     q: jax.Array,  # (B, H, D)
-    k: jax.Array,  # (B, C, K, D)
-    v: jax.Array,  # (B, C, K, D)
-    k_pos: jax.Array,  # (C,) int32
+    k: jax.Array,  # (Bc, C, K, D)
+    v: jax.Array,  # (Bc, C, K, D)
+    k_pos: jax.Array,  # (C,) shared or (Bc, C) per-sequence, int32
     q_pos: jax.Array,  # () int32
+    rows: jax.Array | None = None,  # (B,) int32 query row -> cache row
     *,
     window: int = 0,
     block_c: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
     b, h, d = q.shape
-    _, c, kh, _ = k.shape
+    bc, c, kh, _ = k.shape
     g = h // kh
     scale = 1.0 / np.sqrt(d)
+
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos, (bc, c))
+    if rows is None:
+        rows = jnp.arange(b, dtype=jnp.int32)
 
     pc = (-c) % block_c
     if pc:
         k = jnp.pad(k, ((0, 0), (0, pc), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pc), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pc), constant_values=-1)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pc)), constant_values=-1)
     cc = k.shape[1]
     nc = cc // block_c
 
     qg = q.reshape(b, kh, g, d)
-    qpos = q_pos.astype(jnp.int32).reshape(1, 1)
+    qpos = q_pos.astype(jnp.int32).reshape(1)
+    rows = rows.astype(jnp.int32)
 
-    out = pl.pallas_call(
-        functools.partial(
-            _kernel, num_c_blocks=nc, window=window, scale=scale
-        ),
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=(b, kh, nc),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda i, j, c_: (i, j, 0, 0)),
-            pl.BlockSpec((1, block_c, 1, d), lambda i, j, c_: (i, c_, j, 0)),
-            pl.BlockSpec((1, block_c, 1, d), lambda i, j, c_: (i, c_, j, 0)),
-            pl.BlockSpec((block_c,), lambda i, j, c_: (c_,)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda i, j, c_, rows_, qp_: (i, j, 0, 0)),
+            pl.BlockSpec(
+                (1, block_c, 1, d),
+                lambda i, j, c_, rows_, qp_: (rows_[i], c_, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_c, 1, d),
+                lambda i, j, c_, rows_, qp_: (rows_[i], c_, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_c), lambda i, j, c_, rows_, qp_: (rows_[i], c_)
+            ),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, c_: (i, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda i, j, c_, rows_, qp_: (i, j, 0, 0)
+        ),
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g, d), jnp.float32),
         ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, num_c_blocks=nc, window=window, scale=scale
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
         interpret=interpret,
-    )(qg, k, v, k_pos, qpos)
+    )(rows, qpos, qg, k, v, k_pos)
     return out.reshape(b, h, d)

@@ -33,11 +33,12 @@ def entropy_exit(logits, threshold, *, interpret: bool | None = None):
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
-def flash_decode(q, k, v, k_pos, q_pos, *, window: int = 0,
+def flash_decode(q, k, v, k_pos, q_pos, rows=None, *, window: int = 0,
                  interpret: bool | None = None):
-    """Single-token GQA decode attention against a (ring) KV cache."""
+    """Single-token GQA decode attention against a (ring) KV cache.
+    ``rows`` maps a compacted survivor sub-batch onto cache rows."""
     interp = (not on_tpu()) if interpret is None else interpret
-    return flash_decode_pallas(q, k, v, k_pos, q_pos, window=window,
+    return flash_decode_pallas(q, k, v, k_pos, q_pos, rows, window=window,
                                interpret=interp)
 
 

@@ -28,15 +28,21 @@ def entropy_exit_ref(
 
 def flash_decode_ref(
     q: jax.Array,  # (B, H, D)
-    k: jax.Array,  # (B, C, K, D)
-    v: jax.Array,  # (B, C, K, D)
-    k_pos: jax.Array,  # (C,) int32, -1 = empty slot
+    k: jax.Array,  # (Bc, C, K, D)
+    v: jax.Array,  # (Bc, C, K, D)
+    k_pos: jax.Array,  # (C,) shared or (Bc, C) per-sequence, -1 = empty slot
     q_pos: jax.Array,  # () int32
+    rows: jax.Array | None = None,  # (B,) int32: query row -> cache row
     window: int = 0,
 ) -> jax.Array:
-    """Single-token GQA decode attention with slot validity + optional
-    sliding window.  Returns (B, H, D) in q.dtype."""
+    """Single-token GQA decode attention with (per-sequence) slot validity,
+    optional sliding window, and an optional survivor row map into a larger
+    resident cache.  Returns (B, H, D) in q.dtype."""
     b, h, d = q.shape
+    if rows is not None:
+        k, v = k[rows], v[rows]
+        if k_pos.ndim == 2:
+            k_pos = k_pos[rows]
     kh = k.shape[2]
     g = h // kh
     qf = q.reshape(b, kh, g, d).astype(jnp.float32) / np.sqrt(d)
@@ -44,7 +50,8 @@ def flash_decode_ref(
     valid = (k_pos >= 0) & (k_pos <= q_pos)
     if window > 0:
         valid &= q_pos - k_pos < window
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    valid = valid[:, None, None, :] if valid.ndim == 2 else valid[None, None, None, :]
+    s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))
     return o.reshape(b, h, d).astype(q.dtype)

@@ -11,8 +11,16 @@ Pallas flash_decode kernel (kernels/ref.py reuses it).
 
 KV cache layout (dict):
     k, v: (B, C, K, D)    — C slots (max_len for full, window for ring)
-    pos:  (C,) int32      — absolute position stored in each slot, -1 empty
+    pos:  (B, C) int32    — absolute position stored in each slot, -1 empty
     length: () int32      — tokens decoded so far (write index = length % C)
+
+``pos`` is per *sequence*: in the survivor-compacted tier runtime an
+early-exited sequence skips the downstream tiers for that step, so its
+slot stays -1 (a hole) while survivors' slots go valid — attention then
+masks holes per row instead of attending stale/zero K/V.  Decode entry
+points accept ``rows`` (a device-resident survivor index vector): the
+sub-batch reads/writes only those rows of the full-batch cache, which is
+what lets compaction happen without any host round trip.
 
 MLA (DeepSeek-V3) caches the 512-d latent + decoupled-RoPE key instead:
     ckv: (B, C, kv_rank), k_rope: (B, C, rope_dim), pos, length
@@ -48,7 +56,11 @@ Params = dict
 
 # =============================================================== mask helpers
 def _band_mask(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
-    """(..., Sq, Sk) bool: causal, optionally banded to `window`, k slot valid."""
+    """(..., Sq, Sk) bool: causal, optionally banded to `window`, k slot valid.
+
+    ``k_pos`` may carry leading batch dims — (B, Sk) per-sequence slot
+    validity — which broadcast against ``q_pos``'s (Sq,) to (B, Sq, Sk).
+    """
     m = q_pos[..., :, None] >= k_pos[..., None, :]
     if window > 0:
         m &= q_pos[..., :, None] - k_pos[..., None, :] < window
@@ -62,7 +74,7 @@ def flash_attention(
     k: jax.Array,  # (B, Sk, K, D)
     v: jax.Array,  # (B, Sk, K, D)
     q_pos: jax.Array,  # (Sq,)
-    k_pos: jax.Array,  # (Sk,)
+    k_pos: jax.Array,  # (Sk,) shared, or (B, Sk) per-sequence slot validity
     *,
     window: int = 0,
     block_k: int = 1024,
@@ -106,12 +118,27 @@ def _flash_blocks(k, v, k_pos, block_k):
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+        k_pos = jnp.pad(
+            k_pos,
+            ((0, 0), (0, pad)) if k_pos.ndim == 2 else (0, pad),
+            constant_values=-1,
+        )
     nblk = k.shape[1] // block_k
     kb = k.reshape(b, nblk, block_k, k.shape[2], k.shape[3]).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(b, nblk, block_k, v.shape[2], v.shape[3]).transpose(1, 0, 2, 3, 4)
-    pb = k_pos.reshape(nblk, block_k)
+    if k_pos.ndim == 2:  # per-sequence slot validity: (B, Sk) -> (nblk, B, bk)
+        pb = k_pos.reshape(b, nblk, block_k).transpose(1, 0, 2)
+    else:
+        pb = k_pos.reshape(nblk, block_k)
     return kb, vb, pb, pad
+
+
+def _expand_mask(mask: jax.Array) -> jax.Array:
+    """Broadcast a band mask to score rank (B, Sq, K, G, bk): the mask is
+    (Sq, bk) for shared slot positions, (B, Sq, bk) for per-sequence ones."""
+    if mask.ndim == 2:
+        return mask[None, :, None, None, :]
+    return mask[:, :, None, None, :]
 
 
 def _flash_fwd_core(q, k, v, q_pos, k_pos, window, block_k, scale):
@@ -125,8 +152,8 @@ def _flash_fwd_core(q, k, v, q_pos, k_pos, window, block_k, scale):
         m, l, acc = carry
         kblk, vblk, posb = blk
         s = jnp.einsum("bqkgd,bskd->bqkgs", qf, kblk.astype(jnp.float32))
-        mask = _band_mask(q_pos, posb, window)  # (Sq, bk)
-        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        mask = _band_mask(q_pos, posb, window)  # (Sq, bk) or (B, Sq, bk)
+        s = jnp.where(_expand_mask(mask), s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -174,7 +201,7 @@ def _flash_vjp_bwd(window, block_k, scale, res, dout):
         kblk, vblk, posb = blk
         s = jnp.einsum("bqkgd,bskd->bqkgs", qf, kblk.astype(jnp.float32))
         mask = _band_mask(q_pos, posb, window)
-        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        s = jnp.where(_expand_mask(mask), s, NEG_INF)
         p = jnp.exp(s - m[..., None]) / lsafe[..., None]  # (B,Sq,K,G,bk)
         dvb = jnp.einsum("bqkgs,bqkgd->bskd", p, do)  # (B,bk,K,Dv)
         dp = jnp.einsum("bqkgd,bskd->bqkgs", do, vblk.astype(jnp.float32))
@@ -213,20 +240,36 @@ def init_kv_cache(
     return {
         "k": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
         "v": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
-        "pos": jnp.full((capacity,), -1, jnp.int32),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
         "length": jnp.zeros((), jnp.int32),
     }
 
 
-def _cache_write(cache: Params, k_new: jax.Array, v_new: jax.Array) -> Params:
-    """Write one decode step (Sq == 1) into the (ring) cache."""
+def _cache_write(
+    cache: Params, k_new: jax.Array, v_new: jax.Array, rows: jax.Array | None = None
+) -> Params:
+    """Write one decode step (Sq == 1) into the (ring) cache.
+
+    ``rows=None`` writes every batch row (the masked full-batch path).
+    ``rows`` (Bsub,) writes only those rows of the full-batch cache — the
+    survivor-compacted path — leaving excluded rows' slots untouched (their
+    per-sequence ``pos`` stays -1, so attention masks the hole).
+    """
     c = cache["k"].shape[1]
     idx = cache["length"] % c
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, idx, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, idx, axis=1)
-    pos = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], cache["length"][None], idx, axis=0
-    )
+    if rows is None:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, idx, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, idx, axis=1)
+        b = cache["pos"].shape[0]
+        pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.broadcast_to(cache["length"], (b, 1)), idx, axis=1
+        )
+    else:
+        # mode="drop": a padding row that already exited carries an
+        # out-of-bounds sentinel — its write is skipped, leaving a hole.
+        k = cache["k"].at[rows, idx].set(k_new[:, 0], mode="drop")
+        v = cache["v"].at[rows, idx].set(v_new[:, 0], mode="drop")
+        pos = cache["pos"].at[rows, idx].set(cache["length"], mode="drop")
     return {"k": k, "v": v, "pos": pos, "length": cache["length"] + 1}
 
 
@@ -235,19 +278,24 @@ def _cache_prefill(cache: Params, k: jax.Array, v: jax.Array) -> Params:
     honoring the ring invariant slot = position % capacity so subsequent
     decode steps continue seamlessly."""
     s = k.shape[1]
+    b = k.shape[0]
     cap = cache["k"].shape[1]
     if s >= cap:
         tail_k, tail_v = k[:, s - cap :], v[:, s - cap :]
-        tail_pos = jnp.arange(s - cap, s, dtype=jnp.int32)
+        tail_pos = jnp.broadcast_to(
+            jnp.arange(s - cap, s, dtype=jnp.int32), (b, cap)
+        )
         shift = s % cap
         new_k = jnp.roll(tail_k, shift, axis=1)
         new_v = jnp.roll(tail_v, shift, axis=1)
-        new_pos = jnp.roll(tail_pos, shift, axis=0)
+        new_pos = jnp.roll(tail_pos, shift, axis=1)
     else:
         new_k = jnp.concatenate([k, cache["k"][:, s:]], axis=1)
         new_v = jnp.concatenate([v, cache["v"][:, s:]], axis=1)
         new_pos = jnp.concatenate(
-            [jnp.arange(s, dtype=jnp.int32), cache["pos"][s:]], axis=0
+            [jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)),
+             cache["pos"][:, s:]],
+            axis=1,
         )
     return {
         "k": new_k.astype(cache["k"].dtype),
@@ -283,10 +331,14 @@ def attn_apply(
     use_rope: bool = True,
     window: int | None = None,
     kv_override: tuple[jax.Array, jax.Array] | None = None,  # cross-attention
+    rows: jax.Array | None = None,  # (Bsub,) survivor rows of the full cache
 ) -> tuple[jax.Array, Params | None]:
     """One attention op.  cache=None -> full (training/prefill) attention;
     cache given -> single-step decode against the cache.  ``kv_override``
-    supplies precomputed encoder K/V for cross-attention (no cache write)."""
+    supplies precomputed encoder K/V for cross-attention (no cache write).
+
+    ``rows`` (decode only): x is a compacted survivor sub-batch; row ``i``
+    of x reads/writes row ``rows[i]`` of the full-batch cache."""
     b, s, _ = x.shape
     kh, hd = cfg.num_kv_heads, cfg.head_dim
     g = cfg.num_heads // kh
@@ -314,21 +366,30 @@ def attn_apply(
     if cache is not None and s > 1:
         # -------- prefill with cache write-through: full-sequence attention
         # plus populating the (ring) cache for subsequent decode steps.
+        assert rows is None, "rows is a decode-only (compacted) argument"
         new_cache = _cache_prefill(cache, k, v)
         out = flash_attention(
             qg, k, v, positions, positions, window=window, block_k=min(1024, s)
         )
     elif cache is not None:
         # -------- decode: write this step, attend over the whole cache.
-        cache = _cache_write(cache, k, v)
+        cache = _cache_write(cache, k, v, rows)
+        if rows is None:
+            ck, cv, cp = cache["k"], cache["v"], cache["pos"]
+        else:
+            # Compacted sub-batch: attend survivor rows only.  On TPU the
+            # Pallas flash_decode kernel streams these rows straight out of
+            # the full cache via a scalar-prefetched row map (no copy); the
+            # jnp path relies on XLA fusing the gather into the attention.
+            ck, cv, cp = cache["k"][rows], cache["v"][rows], cache["pos"][rows]
         if cfg.decode_qhd_shard:
             # Run attention in the cache's head-dim-sharded layout: scores
             # become partial sums (all-reduce) instead of resharding the
             # cache or q every layer (§Perf).
             qg = constrain(qg, "b...v")
         out = flash_attention(
-            qg, cache["k"], cache["v"], positions, cache["pos"],
-            window=window, block_k=min(1024, cache["k"].shape[1]),
+            qg, ck, cv, positions, cp,
+            window=window, block_k=min(1024, ck.shape[1]),
         )
         new_cache = cache
     elif kv_override is not None:
@@ -378,7 +439,7 @@ def init_mla_cache(batch: int, capacity: int, cfg: ModelConfig, dtype=jnp.bfloat
     return {
         "ckv": jnp.zeros((batch, capacity, cfg.mla_kv_rank), dtype),
         "k_rope": jnp.zeros((batch, capacity, cfg.mla_rope_dim), dtype),
-        "pos": jnp.full((capacity,), -1, jnp.int32),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
         "length": jnp.zeros((), jnp.int32),
     }
 
@@ -401,6 +462,7 @@ def mla_apply(
     cfg: ModelConfig,
     positions: jax.Array,
     cache: Params | None = None,
+    rows: jax.Array | None = None,  # (Bsub,) survivor rows (decode only)
 ) -> tuple[jax.Array, Params | None]:
     b, s, d = x.shape
     h, hd, r_rope = cfg.num_heads, cfg.head_dim, cfg.mla_rope_dim
@@ -436,6 +498,7 @@ def mla_apply(
         new_cache = None
         if cache is not None:
             # Prefill write-through of the latent cache (ring invariant).
+            assert rows is None, "rows is a decode-only (compacted) argument"
             cap = cache["ckv"].shape[1]
             if s >= cap:
                 shift = s % cap
@@ -443,7 +506,11 @@ def mla_apply(
                     "ckv": jnp.roll(ckv[:, s - cap :], shift, axis=1),
                     "k_rope": jnp.roll(k_rope[:, s - cap :], shift, axis=1),
                     "pos": jnp.roll(
-                        jnp.arange(s - cap, s, dtype=jnp.int32), shift, axis=0
+                        jnp.broadcast_to(
+                            jnp.arange(s - cap, s, dtype=jnp.int32), (b, cap)
+                        ),
+                        shift,
+                        axis=1,
                     ),
                     "length": jnp.asarray(s, jnp.int32),
                 }
@@ -452,7 +519,9 @@ def mla_apply(
                     "ckv": jnp.concatenate([ckv, cache["ckv"][:, s:]], 1),
                     "k_rope": jnp.concatenate([k_rope, cache["k_rope"][:, s:]], 1),
                     "pos": jnp.concatenate(
-                        [jnp.arange(s, dtype=jnp.int32), cache["pos"][s:]], 0
+                        [jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)),
+                         cache["pos"][:, s:]],
+                        1,
                     ),
                     "length": jnp.asarray(s, jnp.int32),
                 }
@@ -461,32 +530,51 @@ def mla_apply(
         assert s == 1
         c = cache["ckv"].shape[1]
         idx = cache["length"] % c
-        cache = {
-            "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, idx, 1),
-            "k_rope": jax.lax.dynamic_update_slice_in_dim(
-                cache["k_rope"], k_rope, idx, 1
-            ),
-            "pos": jax.lax.dynamic_update_slice_in_dim(
-                cache["pos"], cache["length"][None], idx, 0
-            ),
-            "length": cache["length"] + 1,
-        }
+        if rows is None:
+            cache = {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, idx, 1),
+                "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_rope"], k_rope, idx, 1
+                ),
+                "pos": jax.lax.dynamic_update_slice_in_dim(
+                    cache["pos"],
+                    jnp.broadcast_to(cache["length"], (cache["pos"].shape[0], 1)),
+                    idx,
+                    axis=1,
+                ),
+                "length": cache["length"] + 1,
+            }
+            ckv_r, rope_r, pos_r = cache["ckv"], cache["k_rope"], cache["pos"]
+        else:
+            cache = {
+                "ckv": cache["ckv"].at[rows, idx].set(ckv[:, 0], mode="drop"),
+                "k_rope": cache["k_rope"].at[rows, idx].set(
+                    k_rope[:, 0], mode="drop"
+                ),
+                "pos": cache["pos"].at[rows, idx].set(
+                    cache["length"], mode="drop"
+                ),
+                "length": cache["length"] + 1,
+            }
+            ckv_r = cache["ckv"][rows]
+            rope_r = cache["k_rope"][rows]
+            pos_r = cache["pos"][rows]
         wk_b = params["wk_b"].astype(dtype).reshape(r_kv, h, hd)
         # Absorb W_uk into q: (B,1,H,hd) x (r,H,hd) -> (B,1,H,r)
         q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk_b)
         s_lat = jnp.einsum(
             "bshr,bcr->bshc", q_lat.astype(jnp.float32),
-            cache["ckv"].astype(jnp.float32),
+            ckv_r.astype(jnp.float32),
         )
         s_rope = jnp.einsum(
             "bshr,bcr->bshc", q_rope.astype(jnp.float32),
-            cache["k_rope"].astype(jnp.float32),
+            rope_r.astype(jnp.float32),
         )
         logits = (s_lat + s_rope) * scale  # (B,1,H,C)
-        mask = _band_mask(positions, cache["pos"], cfg.sliding_window)  # (1, C)
-        logits = jnp.where(mask[None, :, None, :], logits, NEG_INF)
+        mask = _band_mask(positions, pos_r, cfg.sliding_window)  # (B, 1, C)
+        logits = jnp.where(mask[:, :, None, :], logits, NEG_INF)
         p = jax.nn.softmax(logits, axis=-1)
-        o_lat = jnp.einsum("bshc,bcr->bshr", p, cache["ckv"].astype(jnp.float32))
+        o_lat = jnp.einsum("bshc,bcr->bshr", p, ckv_r.astype(jnp.float32))
         wv_b = params["wv_b"].astype(dtype).reshape(r_kv, h, hd)
         out = jnp.einsum("bshr,rhd->bshd", o_lat.astype(dtype), wv_b)
         new_cache = cache

@@ -176,13 +176,26 @@ def mamba_apply(
     state: Params | None = None,
     *,
     return_state: bool = False,
+    rows: jax.Array | None = None,  # (Bsub,) survivor rows (decode only)
 ) -> tuple[jax.Array, Params | None]:
     """state=None: chunked scan over the sequence (train/prefill).
-    state given: S must be 1 (decode) — O(1) recurrent update."""
+    state given: S must be 1 (decode) — O(1) recurrent update.
+
+    ``rows``: x is a compacted survivor sub-batch; row ``i`` updates row
+    ``rows[i]`` of the full-batch recurrent state (other rows untouched)."""
     inner, h, p, n, g, conv_dim = _dims(cfg)
     bsz, s, _ = x.shape
     dtype = x.dtype
     w = cfg.ssm_conv_width
+
+    full_state = state
+    if rows is not None:
+        assert state is not None and s == 1, "rows is a decode-only argument"
+        state = {
+            "conv": state["conv"][rows],
+            "ssm": state["ssm"][rows],
+            "length": state["length"],
+        }
 
     z = dense(params["w_z"], x, dtype)
     xbc = dense(params["w_xbc"], x, dtype)
@@ -241,11 +254,21 @@ def mamba_apply(
             state["ssm"], x_dt[:, 0], a_dt[:, 0], b_mat[:, 0], c_mat[:, 0]
         )
         y = y1[:, None]
-        new_state = {
-            "conv": new_conv,
-            "ssm": h_new,
-            "length": state["length"] + 1,
-        }
+        if rows is None:
+            new_state = {
+                "conv": new_conv,
+                "ssm": h_new,
+                "length": state["length"] + 1,
+            }
+        else:  # scatter the sub-batch update back into the full-batch state
+            # (mode="drop": exited padding rows carry an OOB sentinel)
+            new_state = {
+                "conv": full_state["conv"].at[rows].set(
+                    new_conv.astype(full_state["conv"].dtype), mode="drop"
+                ),
+                "ssm": full_state["ssm"].at[rows].set(h_new, mode="drop"),
+                "length": full_state["length"] + 1,
+            }
 
     y = y + xs.astype(jnp.float32) * params["D"][:, None]
     y = y.reshape(bsz, s, inner).astype(dtype)

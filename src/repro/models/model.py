@@ -13,6 +13,13 @@ Caches pytree (decode):
      "shared_attn": stacked per-site (hybrid),
      "cross_kv": (L, B, S_enc, K, D) (whisper, set at encode time),
      "length": ()}
+
+Caches are always *full-batch resident*: the survivor-compacted tier
+runtime passes a ``rows`` index vector down ``run_trunk`` so a dense
+sub-batch reads/writes only its rows in place — the C-sized KV buffers
+never move at a tier hop.  KV slot validity (``pos``) is per sequence, so
+a row that skipped a step downstream leaves a hole that later attention
+masks (see models/attention.py).
 """
 
 from __future__ import annotations
@@ -190,9 +197,14 @@ def run_trunk(
     collect: tuple[int, ...] = (),  # 1-based "after layer i" collection points
     remat: bool = False,
     moe_dispatch: str = "einsum",
+    rows: jax.Array | None = None,  # (Bsub,) survivor rows (compacted decode)
 ) -> tuple[jax.Array, Params | None, jax.Array, dict[int, jax.Array]]:
     """Run trunk layers [lo, hi), segmenting at collect points and (hybrid)
-    shared-attention sites.  Returns (h, new_caches, aux, {layer: hidden})."""
+    shared-attention sites.  Returns (h, new_caches, aux, {layer: hidden}).
+
+    ``rows``: h is a dense survivor sub-batch; every stateful block reads
+    and writes only those rows of the full-batch caches (per-sequence slot
+    validity in the KV caches masks the skipped rows' holes later)."""
     layout = trunk_layout(cfg)
     total = sum(n for _, _, n in layout)
     lo, hi = layer_range or (0, total)
@@ -231,7 +243,7 @@ def run_trunk(
                     )
                 h, nc, a = run_stack(
                     sp, h, cfg, kind, positions, sc, cross,
-                    remat=remat, moe_dispatch=moe_dispatch,
+                    remat=remat, moe_dispatch=moe_dispatch, rows=rows,
                 )
                 h = constrain(h, "b..")
                 aux = aux + a
@@ -252,7 +264,7 @@ def run_trunk(
             )
             h, nc, a = block_apply(
                 params["shared_attn"], h, cfg, _SHARED_ATTN_KIND, positions,
-                site_cache,
+                site_cache, rows=rows,
             )
             aux = aux + a
             if nc is not None and caches is not None:

@@ -101,8 +101,12 @@ def block_apply(
     cache: Params | None = None,
     cross_kv: tuple[jax.Array, jax.Array] | None = None,
     moe_dispatch: str = "einsum",
+    rows: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
-    """Returns (h, new_cache, aux_loss)."""
+    """Returns (h, new_cache, aux_loss).
+
+    ``rows`` (decode only): h is a compacted survivor sub-batch; stateful
+    ops read/write rows ``rows`` of the full-batch cache/state."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict[str, Any] = {}
     window = cfg.sliding_window
@@ -115,22 +119,31 @@ def block_apply(
                 params["attn"], hn, cfg, positions, sa_cache,
                 use_rope=kind.use_rope,
                 window=window if kind.causal else 0,
+                rows=rows if sa_cache is not None else None,
             )
         else:
-            y, c = attn_mod.mla_apply(params["attn"], hn, cfg, positions, sa_cache)
+            y, c = attn_mod.mla_apply(
+                params["attn"], hn, cfg, positions, sa_cache,
+                rows=rows if sa_cache is not None else None,
+            )
         h = h + y
         if c is not None:
             new_cache["self"] = c
     elif kind.mixer == "mamba":
         hn = norm_apply(cfg.norm_type, params["norm1"], h)
         y, c = mamba_mod.mamba_apply(
-            params["mamba"], hn, cfg, state=cache.get("self") if cache else None
+            params["mamba"], hn, cfg,
+            state=cache.get("self") if cache else None,
+            rows=rows if cache else None,
         )
         h = h + y
         if c is not None:
             new_cache["self"] = c
 
     if kind.cross_attention and cross_kv is not None:
+        if rows is not None:
+            # Compacted sub-batch: cross K/V rows follow the survivors.
+            cross_kv = (cross_kv[0][rows], cross_kv[1][rows])
         hn = norm_apply(cfg.norm_type, params["norm_x"], h)
         y, _ = attn_mod.attn_apply(
             params["xattn"], hn, cfg, positions, None,
@@ -173,10 +186,12 @@ def run_stack(
     *,
     remat: bool = False,
     moe_dispatch: str = "einsum",
+    rows: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Scan the blocks of a (slice of a) stack over the residual stream.
 
-    Returns (h, new stacked caches, summed aux loss).
+    Returns (h, new stacked caches, summed aux loss).  ``rows`` threads the
+    survivor-compaction row map into every stateful block (decode only).
     """
 
     if caches is None:
@@ -214,7 +229,7 @@ def run_stack(
         )
         h, new_cache, aux = block_apply(
             lparams, h, cfg, kind, positions, lcache, lcross,
-            moe_dispatch=moe_dispatch,
+            moe_dispatch=moe_dispatch, rows=rows,
         )
         cache_full = jax.tree_util.tree_map(
             lambda full, one: jax.lax.dynamic_update_index_in_dim(

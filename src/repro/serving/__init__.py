@@ -12,6 +12,7 @@ from repro.serving.engine import ExitStats, ServingEngine
 from repro.serving.multitier import MultiTierServer, MultiTierStepReport
 from repro.serving.partitioned import PartitionedServer, StepReport
 from repro.serving.tiers import (
+    HopCompaction,
     TierExecutor,
     TierSegment,
     TierStepResult,
@@ -27,6 +28,7 @@ __all__ = [
     "MultiTierServer",
     "MultiTierStepReport",
     "RepartitionController",
+    "HopCompaction",
     "TierExecutor",
     "TierSegment",
     "TierStepResult",

@@ -8,9 +8,22 @@ closes that loop against the unified tier runtime:
     ExitStats.conditional_probs() -> Partitioner / solve_multitier
         -> PartitionedServer.set_split / MultiTierServer.install_cuts
 
+Three triggers are supported:
+
+  * **explicit** — ``update(stats)`` re-solves unconditionally;
+  * **drift** — ``observe(report)`` accumulates per-step exit counts from
+    the serving loop; every ``every_n_steps`` steps it compares the
+    measured exit distribution against the one the installed plan was
+    solved for and re-solves when the KL divergence exceeds
+    ``kl_threshold`` (``None`` = re-solve on every check);
+  * **network** — ``update_network(profile)`` / ``update_tiers(specs)``
+    re-solve with the last measured probabilities when the link changes.
+
 Swaps go through ``TierExecutor.install``, which re-uses the compiled
 function of every tier segment whose (layer range, branches) is unchanged
-— repartitioning never pays a full re-jit.
+— repartitioning never pays a full re-jit.  When ``batch`` is set, K>=3
+solves use the bucketed lattice cost (core.multitier) so the plan is
+honest about the compacted runtime's padding waste.
 """
 
 from __future__ import annotations
@@ -21,12 +34,36 @@ import numpy as np
 
 from repro.core.multitier import TierSpec, solve_multitier
 from repro.core.partitioner import Partitioner
-from repro.core.types import CostProfile
+from repro.core.types import CostProfile, NetworkProfile
 from repro.serving.engine import ExitStats
 from repro.serving.multitier import MultiTierServer
 from repro.serving.partitioned import PartitionedServer
 
-__all__ = ["RepartitionController"]
+__all__ = ["RepartitionController", "exit_distribution", "exit_drift_kl"]
+
+
+def exit_distribution(p_k: np.ndarray) -> np.ndarray:
+    """Conditional per-branch exit probs -> categorical distribution over
+    (exit at branch 1, ..., exit at branch K, reach the main head)."""
+    p_k = np.asarray(p_k, float)
+    out = np.empty(len(p_k) + 1)
+    alive = 1.0
+    for j, p in enumerate(p_k):
+        out[j] = alive * p
+        alive *= 1.0 - p
+    out[-1] = alive
+    return out
+
+
+def exit_drift_kl(
+    measured_p: np.ndarray, installed_p: np.ndarray, eps: float = 1e-6
+) -> float:
+    """KL(measured || installed) between the two exit distributions."""
+    m = exit_distribution(measured_p) + eps
+    q = exit_distribution(installed_p) + eps
+    m /= m.sum()
+    q /= q.sum()
+    return float(np.sum(m * np.log(m / q)))
 
 
 @dataclasses.dataclass
@@ -37,27 +74,153 @@ class RepartitionController:
     server: PartitionedServer | MultiTierServer
     profile: CostProfile
     tiers: list[TierSpec] | None = None  # required for MultiTierServer
+    kl_threshold: float | None = None  # drift gate for observe()-driven solves
+    every_n_steps: int = 0  # decode-loop hook cadence (0 = explicit only)
+    batch: int | None = None  # bucketed-aware K>=3 solving
+    window_steps: int = 256  # drift-window decay horizon (see observe())
 
     def __post_init__(self):
         if isinstance(self.server, MultiTierServer) and self.tiers is None:
             self.tiers = list(self.server.tiers)
+        k = len(self.server.cfg.branch_layers)
+        # Per-branch (arrivals, exits) over the current window.  A branch
+        # the installed plan never evaluates (discarded at a cut, or inside
+        # the final tier) accrues no arrivals — its probability is then
+        # carried over from the installed estimate rather than read as 0,
+        # so re-solves don't lock in on fictitious p=0 branches.  (A plan
+        # that evaluates *no* branches observes nothing at all; escaping
+        # that state needs an explicit update() from a K=1 calibration
+        # pass or a network trigger — drift alone cannot see it.)
+        self._arrivals = np.zeros(k, np.float64)
+        self._exits = np.zeros(k, np.float64)
+        self._steps_observed = 0
+        self._window_age = 0
+        self._installed_p: np.ndarray | None = None
 
+    # ------------------------------------------------------------ solving
     def solve(self, p_k: np.ndarray) -> tuple[int, ...]:
         """Optimal cut vector for the profile with live exit probs."""
         prof = Partitioner(self.profile).with_exit_probs(p_k).profile
         if isinstance(self.server, MultiTierServer):
             plan = solve_multitier(
-                prof.t_c, prof.alpha, prof.branch_exit_probs(), self.tiers
+                prof.t_c, prof.alpha, prof.branch_exit_probs(), self.tiers,
+                batch=self.batch,
             )
             return plan.cut_after
         return (Partitioner(prof).solve().split_layer,)
 
-    def update(self, stats: ExitStats) -> tuple[int, ...]:
-        """Re-solve from live stats and hot-swap the split if it moved.
-        Returns the installed cut vector."""
-        cuts = self.solve(stats.conditional_probs())
+    def _install(self, p_k: np.ndarray) -> tuple[int, ...]:
+        cuts = self.solve(p_k)
+        self._installed_p = np.asarray(p_k, float)
+        # Start a fresh measurement window: drift is judged against the
+        # traffic seen *under the new plan*, and the lifetime-average bias
+        # (old regimes drowning out new ones) is bounded by the window.
+        self._arrivals[:] = 0
+        self._exits[:] = 0
+        self._window_age = 0
         if isinstance(self.server, MultiTierServer):
             self.server.install_cuts(cuts)
             return self.server.cuts
         self.server.set_split(cuts[0])
         return (self.server.split_layer,)
+
+    def update(self, stats: ExitStats) -> tuple[int, ...]:
+        """Re-solve from live stats and hot-swap the split if it moved.
+        Returns the installed cut vector."""
+        return self._install(stats.conditional_probs())
+
+    # ----------------------------------------------------- drift detection
+    def observe(self, report) -> tuple[int, ...] | None:
+        """Decode-loop hook: accumulate one step's exit outcome (any report
+        carrying ``branch_take`` + ``tokens``).  Every ``every_n_steps``
+        observed steps, re-solve if the measured exit distribution drifted
+        past ``kl_threshold``.  Returns the new cuts when a swap happened.
+        """
+        batch = report.tokens.shape[0]
+        alive = np.ones((batch,), bool)
+        for j, layer in enumerate(self.server.cfg.branch_layers):
+            take = report.branch_take.get(layer)
+            if take is None:
+                continue  # branch not evaluated under this plan
+            self._arrivals[j] += float(alive.sum())
+            self._exits[j] += float(take.sum())
+            alive &= ~take
+        self._steps_observed += 1
+        self._window_age += 1
+        if self._window_age >= self.window_steps:
+            # Exponential decay: halve the window so the measured
+            # distribution tracks regime changes in O(window_steps) steps
+            # instead of degrading with controller lifetime.
+            self._arrivals *= 0.5
+            self._exits *= 0.5
+            self._window_age = 0
+        if self.every_n_steps and self._steps_observed % self.every_n_steps == 0:
+            return self.maybe_update()
+        return None
+
+    def measured_probs(self) -> np.ndarray:
+        """Conditional p_k per branch from the observed window.  Branches
+        with no observed arrivals fall back to the installed estimate."""
+        out = []
+        for j in range(len(self._arrivals)):
+            if self._arrivals[j] > 0:
+                out.append(self._exits[j] / self._arrivals[j])
+            elif self._installed_p is not None:
+                out.append(float(self._installed_p[j]))
+            else:
+                out.append(0.0)
+        return np.asarray(out)
+
+    def drift_kl(self) -> float:
+        """KL between measured and installed exit distributions
+        (+inf when nothing was installed through this controller yet)."""
+        if self._installed_p is None:
+            return float("inf")
+        return exit_drift_kl(self.measured_probs(), self._installed_p)
+
+    def maybe_update(self, force: bool = False) -> tuple[int, ...] | None:
+        """Re-solve from the observed counts if drift warrants it."""
+        if self._arrivals.sum() == 0:
+            return None  # nothing observed under this plan yet
+        drifted = (
+            force
+            or self.kl_threshold is None
+            or self.drift_kl() > self.kl_threshold
+        )
+        if not drifted:
+            return None
+        return self._install(self.measured_probs())
+
+    # ------------------------------------------------------ network drift
+    def update_network(self, network: NetworkProfile) -> tuple[int, ...]:
+        """The 2-tier link changed: re-solve with the last measured (or
+        installed) exit probs against the new bandwidth."""
+        if not isinstance(self.server, PartitionedServer):
+            raise TypeError("update_network is 2-tier; use update_tiers for K>=3")
+        self.profile = dataclasses.replace(self.profile, network=network)
+        self.server.network = network
+        if self.server.cost_profile is not None:
+            self.server.cost_profile = self.profile
+        cuts = self._install(self._best_p())
+        # Refresh segments even when the cut didn't move: the new uplink
+        # must reach the executor's per-hop byte/latency accounting.
+        self.server.executor.install(self.server._segments(self.server.split_layer))
+        return cuts
+
+    def update_tiers(self, tiers: list[TierSpec]) -> tuple[int, ...]:
+        """K>=3 tier topology / uplinks changed: re-solve and hot-swap."""
+        if not isinstance(self.server, MultiTierServer):
+            raise TypeError("update_tiers is K>=3; use update_network for 2-tier")
+        self.tiers = list(tiers)
+        self.server.tiers = tuple(tiers)
+        cuts = self._install(self._best_p())
+        self.server.executor.install(self.server._segments(self.server.cuts))
+        return cuts
+
+    def _best_p(self) -> np.ndarray:
+        """Most recent exit-prob estimate: measured > installed > zeros."""
+        if self._arrivals.sum() > 0:
+            return self.measured_probs()
+        if self._installed_p is not None:
+            return self._installed_p
+        return np.zeros(len(self.server.cfg.branch_layers))

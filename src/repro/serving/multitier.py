@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.multitier import MultiTierPlan, TierSpec, expected_time_multitier
-from repro.serving.tiers import TierExecutor, segments_for_cuts
+from repro.serving.tiers import HopCompaction, TierExecutor, segments_for_cuts
 
 __all__ = ["MultiTierServer", "MultiTierStepReport"]
 
@@ -36,6 +36,9 @@ class MultiTierStepReport:
     bytes_per_hop: tuple[float, ...]
     transfer_s_per_hop: tuple[float, ...]  # bytes * 8 / uplink_bps per hop
     est_latency_s: float | None  # lattice cost model at the installed cuts
+    compaction: tuple[HopCompaction, ...] = ()  # per-hop (survivors, bucket)
+    branch_take: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    sim_transfer_s: tuple[float, ...] = ()  # simulated uplink wall time
 
 
 @dataclasses.dataclass
@@ -45,6 +48,8 @@ class MultiTierServer:
     tiers: Sequence[TierSpec]
     cuts: tuple[int, ...]  # layer after which each hop happens (K-1,)
     cost: tuple[np.ndarray, np.ndarray] | None = None  # (t_c, alpha) estimates
+    compaction: str = "bucketed"  # "off" = legacy masked full-batch tiers
+    simulate_network: bool = False  # sleep each hop's transfer time
 
     def __post_init__(self):
         self.tiers = tuple(self.tiers)
@@ -55,7 +60,9 @@ class MultiTierServer:
                 f"got {self.cuts}"
             )
         self.executor = TierExecutor(
-            self.cfg, self.params, self._segments(self.cuts)
+            self.cfg, self.params, self._segments(self.cuts),
+            compaction=self.compaction,
+            simulate_network=self.simulate_network,
         )
 
     @classmethod
@@ -80,6 +87,11 @@ class MultiTierServer:
         """Hot-swap the hop points; unchanged tier segments keep their
         compiled functions (no re-jit)."""
         cuts = tuple(int(c) for c in cuts)
+        if len(cuts) != len(self.tiers) - 1:
+            raise ValueError(
+                f"{len(self.tiers)} tiers need {len(self.tiers) - 1} cuts, "
+                f"got {cuts}"
+            )
         if cuts == self.cuts:
             return
         self.executor.install(self._segments(cuts))
@@ -102,12 +114,17 @@ class MultiTierServer:
             bytes_per_hop=res.bytes_per_hop,
             transfer_s_per_hop=transfer,
             est_latency_s=self._estimate(res),
+            compaction=res.compaction,
+            branch_take=res.branch_take,
+            sim_transfer_s=res.sim_transfer_s,
         )
         return rep, caches
 
     def _estimate(self, res) -> float | None:
         """Lattice cost model (core.multitier) at the installed cuts with
-        the *measured* per-branch exit fractions substituted for p."""
+        the *measured* per-branch exit fractions substituted for p.  When
+        the runtime compacts, the estimate uses the bucketed cost so it is
+        honest about padding waste."""
         if self.cost is None:
             return None
         t_c, alpha = self.cost
@@ -118,4 +135,7 @@ class MultiTierServer:
             took = float(res.branch_take[layer].sum())
             p[layer] = took / alive if alive > 0 else 0.0
             alive -= took
-        return expected_time_multitier(t_c, alpha, p, list(self.tiers), self.cuts)
+        return expected_time_multitier(
+            t_c, alpha, p, list(self.tiers), self.cuts,
+            batch=batch if self.compaction == "bucketed" else None,
+        )

@@ -31,8 +31,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.latency import expected_time
+from repro.core.multitier import TierSpec, expected_time_multitier
 from repro.core.types import CostProfile, NetworkProfile
-from repro.serving.tiers import TierExecutor, segments_for_cuts
+from repro.serving.tiers import HopCompaction, TierExecutor, segments_for_cuts
 
 __all__ = ["PartitionedServer", "StepReport"]
 
@@ -44,6 +45,9 @@ class StepReport:
     shipped: int  # sequences that crossed the cut
     bytes_shipped: float
     est_latency_s: float | None  # paper Eq. 5 with the measured exit fraction
+    compaction: tuple[HopCompaction, ...] = ()  # cloud sub-batch shape
+    branch_take: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    sim_transfer_s: tuple[float, ...] = ()  # simulated uplink wall time
 
 
 @dataclasses.dataclass
@@ -53,10 +57,14 @@ class PartitionedServer:
     split_layer: int  # the plan's v_s (0 = cloud-only, L = edge-only)
     network: NetworkProfile | None = None
     cost_profile: CostProfile | None = None  # for latency estimates
+    compaction: str = "bucketed"  # "off" = legacy masked full-batch cloud
+    simulate_network: bool = False  # sleep each hop's transfer time
 
     def __post_init__(self):
         self.executor = TierExecutor(
-            self.cfg, self.params, self._segments(self.split_layer)
+            self.cfg, self.params, self._segments(self.split_layer),
+            compaction=self.compaction,
+            simulate_network=self.simulate_network,
         )
 
     def _segments(self, s: int):
@@ -83,14 +91,23 @@ class PartitionedServer:
             shipped=shipped,
             bytes_shipped=nbytes,
             est_latency_s=self._estimate(
-                self.split_layer, float(res.exited.mean())
+                self.split_layer, float(res.exited.mean()),
+                res.tokens.shape[0],
             ),
+            compaction=res.compaction,
+            branch_take=res.branch_take,
+            sim_transfer_s=res.sim_transfer_s,
         )
         return rep, caches
 
-    def _estimate(self, s: int, exit_frac: float) -> float | None:
+    def _estimate(self, s: int, exit_frac: float, batch: int) -> float | None:
         """Paper Eq. 5 evaluated at this split with the *measured* exit
-        fraction substituted for p (closing the calibration loop)."""
+        fraction substituted for p (closing the calibration loop).
+
+        When the runtime compacts (``compaction="bucketed"``) the estimate
+        instead uses the unified lattice cost with ``batch`` set, so K=2
+        reports the same padding-honest numbers as MultiTierServer rather
+        than the ideal ``surv(s) * B`` cloud term."""
         if self.cost_profile is None:
             return None
         prof = self.cost_profile
@@ -100,4 +117,13 @@ class PartitionedServer:
                 for b in prof.branches
             )
             prof = dataclasses.replace(prof, branches=branches)
+        if self.compaction == "bucketed" and prof.network is not None:
+            tiers = [
+                TierSpec("edge", prof.gamma, prof.network.bandwidth_bps),
+                TierSpec("cloud", 1.0),
+            ]
+            return expected_time_multitier(
+                prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers, (s,),
+                batch=batch,
+            )
         return expected_time(prof, s)

@@ -16,22 +16,58 @@ Branch placement follows the paper's semantics (Sec. IV-B, Fig. 2(c)):
     output layer), except in the single-tier case where the whole
     BranchyNet runs in one place.
 
-Exit masking is device-resident: branch entropy thresholding, token
-selection, and survivor accounting are fused in jnp inside each tier's
-jitted segment, and the step performs exactly ONE device->host sync — a
-single ``jax.device_get`` of the packed (tokens, exit masks, entropies)
-pytree.  The old per-branch ``np.asarray``/``int(...)`` round trips inside
-the decode loop are gone; ``TierExecutor.host_syncs`` counts the remaining
-fetches so benchmarks/tests can assert the invariant.
+Survivor compaction (compact -> run -> scatter)
+-----------------------------------------------
+The paper's cost model banks on downstream work shrinking with exits, so
+downstream tiers must not burn FLOPs on masked-out rows.  With
+``compaction="bucketed"`` (the default) every downstream tier segment is a
+single fused jitted call that
 
-Segment functions are cached by their spec ``(layer_lo, layer_hi,
-branches, head)``: a repartition that moves one cut re-uses the jitted
-(and XLA-compiled) callables of every unchanged tier segment.
+  1. **compacts**: a stable device-resident ``argsort`` of the exit mask
+     orders survivors first; the leading ``bucket`` rows (survivors plus,
+     if the bucket is larger, already-exited padding rows) are gathered
+     into a dense sub-batch — hidden state only.  KV caches stay
+     full-batch resident: the sub-batch reads/writes its rows *in place*
+     through the ``rows`` plumbing of :func:`repro.models.model.run_trunk`
+     (per-sequence slot validity masks the skipped rows' holes later);
+  2. **runs** the tier's trunk layers, branches and (on the last tier)
+     the head on the ``(bucket, 1, d)`` sub-batch, so tier FLOPs scale
+     with the padded survivor count instead of the full batch;
+  3. **scatters** tokens / exit masks / entropies / logits back to
+     original batch order — so the step still ends in exactly ONE
+     device->host sync of the packed full-batch pytree, and
+     :class:`TierStepResult`'s contract is unchanged.
+
+Bucket ladder and the one-sync invariant.  jit needs static shapes, so
+sub-batches are padded to :func:`repro.core.multitier.bucket_ladder`
+(powers of two, plus the full batch).  The bucket for step ``t`` is chosen
+host-side from step ``t-1``'s survivor counts (fetched in the same single
+sync) — no extra mid-step sync.  Step 0 runs full-batch buckets.  If a
+step's true survivors overflow the planned bucket (exit-rate spike), the
+host detects it from the fetched masks and *re-runs the whole step* from
+the entry caches with measured buckets until nothing overflows (at most K
+runs): results are always bitwise faithful, at the cost of one extra sync
+per (counted) ``overflow_retries`` iteration.
+
+Defined divergence from the masked path: an exited sequence contributes
+no downstream-tier KV for that step (the masked path, which runs every
+row everywhere, does write it).  Downstream attention masks the hole via
+per-sequence slot validity, so the semantics are deterministic and
+independent of bucket/padding choices; single-step outputs are bitwise
+identical to the masked path, multi-step outputs are identical whenever
+an exited sequence does not later re-enter the downstream tiers.
+
+Segment functions are cached by ``(spec, bucket)`` where spec is
+``(layer_lo, layer_hi, branches, head)``: a repartition that moves one
+cut re-uses the jitted callables of every unchanged tier segment, and a
+survivor-count change *within* a bucket re-jits nothing
+(``trace_counts`` exposes this for tests).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Sequence
 
 import jax
@@ -40,6 +76,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.calibration import normalized_entropy
+from repro.core.multitier import bucket_for
 from repro.models.layers import norm_apply
 from repro.models.model import (
     _branch_logits,
@@ -53,6 +90,7 @@ __all__ = [
     "TierSegment",
     "TierStepResult",
     "TierExecutor",
+    "HopCompaction",
     "segments_for_cuts",
     "bytes_per_sequence",
     "TOKEN_ID_BYTES",
@@ -82,6 +120,19 @@ class TierSegment:
     def spec(self, head: bool) -> tuple:
         """Cache key for the compiled segment function."""
         return (self.layer_lo, self.layer_hi, self.branches, head)
+
+
+@dataclasses.dataclass(frozen=True)
+class HopCompaction:
+    """Per-hop compaction accounting: who survived, what shape ran."""
+
+    survivors: int  # true survivors crossing the hop
+    bucket: int  # static sub-batch width the downstream tier ran
+
+    @property
+    def padded_waste(self) -> int:
+        """Padding rows the downstream tier computed but did not need."""
+        return self.bucket - self.survivors
 
 
 def bytes_per_sequence(cfg: ModelConfig, cut_layer: int) -> float:
@@ -132,7 +183,13 @@ def segments_for_cuts(
 @dataclasses.dataclass
 class TierStepResult:
     """Everything a server needs from one decode step, fetched in one
-    device->host sync (except the device-resident feedback arrays)."""
+    device->host sync (except the device-resident feedback arrays).
+
+    In compacted mode, ``branch_entropy`` rows and ``last_logits`` rows of
+    sequences that exited upstream and were not selected as padding are
+    zero (they were never computed); ``tokens``/``exited``/``branch_take``
+    are always exact for every sequence.
+    """
 
     tokens: np.ndarray  # (B,) chosen token per sequence
     exited: np.ndarray  # (B,) bool — exited at some side branch
@@ -143,23 +200,49 @@ class TierStepResult:
     bytes_per_hop: tuple[float, ...]
     tokens_dev: jax.Array  # device copy for the next step's input
     last_logits: jax.Array  # (B, V) main-head logits, device-resident
+    compaction: tuple[HopCompaction, ...] = ()  # per executed hop
+    sim_transfer_s: tuple[float, ...] = ()  # simulated uplink time per hop
 
 
 class TierExecutor:
-    """Compiles one jitted segment per tier and runs the K-hop decode step.
+    """Compiles one jitted segment per (tier, bucket) and runs the K-hop
+    decode step with survivor compaction at every hop.
 
     ``install`` swaps the segment list in place; segment functions are
-    cached by spec so an unchanged tier is never re-jitted.
+    cached by (spec, bucket) so an unchanged tier is never re-jitted.
+
+    ``compaction``: "bucketed" (default) runs each downstream tier on a
+    dense survivor sub-batch padded to the bucket ladder; "off" keeps the
+    legacy masked full-batch execution on every tier.
+
+    ``simulate_network``: opt-in wall-clock simulation — after the step's
+    single host sync, sleep for each hop's ``shipped_bytes * 8 /
+    uplink_bps`` so measured step time (not just byte accounting) reflects
+    the bandwidth cliff.
     """
 
     def __init__(
-        self, cfg: ModelConfig, params: Any, segments: Sequence[TierSegment]
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        segments: Sequence[TierSegment],
+        *,
+        compaction: str = "bucketed",
+        simulate_network: bool = False,
     ):
+        if compaction not in ("bucketed", "off"):
+            raise ValueError(f"unknown compaction mode: {compaction!r}")
         self.cfg = cfg
         self.params = params
+        self.compaction = compaction
+        self.simulate_network = simulate_network
         self.total_layers = sum(n for _, _, n in trunk_layout(cfg))
         self._fn_cache: dict[tuple, Any] = {}
         self.host_syncs = 0
+        self.overflow_retries = 0
+        #: (spec, bucket) -> number of jax traces (a survivor-count change
+        #: within a bucket must not add one).
+        self.trace_counts: dict[tuple, int] = {}
         self.install(segments)
 
     # -------------------------------------------------------------- plan
@@ -183,58 +266,109 @@ class TierExecutor:
             if not seg.is_empty else None
             for i, seg in enumerate(segments)
         ]
+        # Survivor-count hints (segment index -> last observed count) are
+        # plan-specific; a fresh plan starts conservatively at full batch.
+        self._hints: dict[int, int] = {}
 
     def segment_fn(self, index: int):
-        """The compiled callable for segment ``index`` (None if empty)."""
+        """The compiled full-batch callable for segment ``index``
+        (None if the segment is empty)."""
         return self._fns[index]
 
-    def _segment_fn(self, seg: TierSegment, head: bool):
-        key = seg.spec(head)
+    def _segment_fn(self, seg: TierSegment, head: bool, bucket: int | None = None):
+        """Build (or fetch) the jitted callable for one tier segment.
+
+        ``bucket=None``: masked full-batch execution (the entry tier, and
+        every tier in compaction="off" mode).  ``bucket=b``: the fused
+        compact(b) -> run -> scatter step described in the module
+        docstring.  All variants share the signature
+        ``fn(params, x, pos, exited, chosen, caches)`` with full-batch x.
+        """
+        key = (seg.spec(head), bucket)
         if key in self._fn_cache:
             return self._fn_cache[key]
         cfg = self.cfg
         lo, hi, branches = seg.layer_lo, seg.layer_hi, seg.branches
+        trace_counts = self.trace_counts
 
         def fn(params, x, pos, exited, chosen, caches):
+            trace_counts[key] = trace_counts.get(key, 0) + 1
+            batch = x.shape[0]
             positions = pos[None].astype(jnp.int32)
-            h = embed_decode(params, x, positions, cfg) if lo == 0 else x
-            h, caches, _, collected = run_trunk(
+            if bucket is None:
+                xb, ex, ch, rows, rows_rw = x, exited, chosen, None, None
+            else:
+                # ---- compact: survivors first (stable -> original order),
+                # then already-exited padding rows up to the bucket width.
+                order = jnp.argsort(exited, stable=True)
+                rows = order[:bucket]
+                xb = x[rows]
+                ex, ch = exited[rows], chosen[rows]
+                # Padding rows read clamped garbage (discarded) and carry
+                # an out-of-bounds sentinel so their cache writes drop:
+                # downstream KV validity is a pure function of exits, not
+                # of which rows happened to pad the bucket.
+                rows_rw = jnp.where(ex, batch, rows).astype(jnp.int32)
+            h = embed_decode(params, xb, positions, cfg) if lo == 0 else xb
+            h, new_caches, _, collected = run_trunk(
                 params, h, cfg, positions, caches,
-                layer_range=(lo, hi), collect=branches,
+                layer_range=(lo, hi), collect=branches, rows=rows_rw,
             )
             bl = _branch_logits(params, collected, cfg)
-            batch = x.shape[0]
+            sub = xb.shape[0]
             takes, ents = [], []
             for layer in branches:
                 logits_b = bl[layer][:, 0]
                 e = normalized_entropy(logits_b)
-                take = (e < cfg.exit_threshold) & ~exited
-                chosen = jnp.where(
-                    take, jnp.argmax(logits_b, -1).astype(jnp.int32), chosen
+                take = (e < cfg.exit_threshold) & ~ex
+                ch = jnp.where(
+                    take, jnp.argmax(logits_b, -1).astype(jnp.int32), ch
                 )
-                exited = exited | take
+                ex = ex | take
                 takes.append(take)
                 ents.append(e)
-            out = {
-                "caches": caches,
-                "exited": exited,
-                "chosen": chosen,
-                "take": jnp.stack(takes) if takes
-                else jnp.zeros((0, batch), bool),
-                "ents": jnp.stack(ents) if ents
-                else jnp.zeros((0, batch), jnp.float32),
-            }
+            take_s = jnp.stack(takes) if takes else jnp.zeros((0, sub), bool)
+            ents_s = (
+                jnp.stack(ents) if ents else jnp.zeros((0, sub), jnp.float32)
+            )
+            out: dict[str, Any] = {"caches": new_caches}
+            logits = None
             if head:
                 hF = norm_apply(cfg.norm_type, params["final_norm"], h)
                 logits = _unembed(params, hF, cfg)[:, 0]
-                out["logits"] = logits
-                out["chosen"] = jnp.where(
-                    exited, chosen, jnp.argmax(logits, -1).astype(jnp.int32)
+                ch = jnp.where(
+                    ex, ch, jnp.argmax(logits, -1).astype(jnp.int32)
                 )
                 out["caches"] = dict(out["caches"])
                 out["caches"]["length"] = caches["length"] + 1
+            if bucket is None:
+                out["exited"], out["chosen"] = ex, ch
+                out["take"], out["ents"] = take_s, ents_s
+                if head:
+                    out["logits"] = logits
+                else:
+                    out["hidden"] = h
             else:
-                out["hidden"] = h
+                # ---- scatter back to original batch order (device-side).
+                nbr = len(branches)
+                out["exited"] = exited.at[rows].set(ex)
+                out["chosen"] = chosen.at[rows].set(ch)
+                out["take"] = (
+                    jnp.zeros((nbr, batch), bool).at[:, rows].set(take_s)
+                )
+                out["ents"] = (
+                    jnp.zeros((nbr, batch), jnp.float32).at[:, rows].set(ents_s)
+                )
+                if head:
+                    out["logits"] = (
+                        jnp.zeros((batch, logits.shape[-1]), logits.dtype)
+                        .at[rows].set(logits)
+                    )
+                else:
+                    out["hidden"] = (
+                        jnp.zeros((batch, 1, h.shape[-1]), h.dtype)
+                        .at[rows].set(h)
+                    )
             return out
 
         jitted = jax.jit(fn)
@@ -242,8 +376,25 @@ class TierExecutor:
         return jitted
 
     # -------------------------------------------------------------- step
-    def step(self, tok: jax.Array, pos, caches: Any) -> tuple[TierStepResult, Any]:
-        """One decode step across all tiers: exactly one host sync."""
+    def _plan_buckets(self, batch: int) -> dict[int, int]:
+        """Host-side bucket plan for this step, from last step's survivor
+        counts (full batch where no hint exists yet)."""
+        if self.compaction != "bucketed":
+            return {}
+        executed = [
+            i for i, s in enumerate(self.segments) if not s.is_empty
+        ]
+        buckets = {}
+        for i in executed[1:]:
+            buckets[i] = bucket_for(self._hints.get(i, batch), batch)
+        return buckets
+
+    def _run_once(
+        self, tok: jax.Array, pos, caches: Any, buckets: dict[int, int]
+    ) -> tuple:
+        """Dispatch all tier segments and perform the single host sync.
+        Returns (host dict, caches, entering-survivor counts per segment,
+        chosen, logits, alive-after-segment counts)."""
         cfg = self.cfg
         batch = tok.shape[0]
         posj = jnp.asarray(pos, jnp.int32)
@@ -251,21 +402,29 @@ class TierExecutor:
         chosen = jnp.zeros((batch,), jnp.int32)
         x: jax.Array = tok
         fetch: dict[str, Any] = {}
-        seg_branches: list[tuple[int, tuple[int, ...]]] = []
         logits = None
 
         for i, seg in enumerate(self.segments):
-            fn = self._fns[i]
-            if fn is None:
+            if seg.is_empty:
                 continue
+            head = i == self._head_idx
+            b = buckets.get(i)
+            if b is None:
+                fn = self._fns[i]
+            else:
+                # Downstream tiers always run the compact->run->scatter fn
+                # in bucketed mode — even at bucket == batch — so exited
+                # rows' downstream cache writes are always dropped and KV
+                # validity stays a pure function of exits, never of which
+                # fn variant a hint happened to select.
+                fn = self._segment_fn(seg, head, min(b, batch))
             out = fn(self.params, x, posj, exited, chosen, caches)
             caches = out["caches"]
             exited, chosen = out["exited"], out["chosen"]
             if seg.branches:
                 fetch[f"take{i}"] = out["take"]
                 fetch[f"ents{i}"] = out["ents"]
-                seg_branches.append((i, seg.branches))
-            if i == self._head_idx:
+            if head:
                 logits = out["logits"]
             else:
                 x = out["hidden"]
@@ -275,30 +434,98 @@ class TierExecutor:
         host = jax.device_get(fetch)  # the step's single device->host sync
         self.host_syncs += 1
 
-        # Host-side bookkeeping on the fetched masks (no further syncs).
+        # Host-side bookkeeping on the fetched masks (no further syncs):
+        # cumulative exits -> survivors entering each segment.
+        exited_run = np.zeros((batch,), bool)
+        alive_after_seg = {}
+        for i, seg in enumerate(self.segments):
+            for row, _layer in enumerate(seg.branches):
+                exited_run |= host[f"take{i}"][row]
+            alive_after_seg[i] = int(batch - exited_run.sum())
+        entering = {
+            i: alive_after_seg[i - 1]
+            for i in range(1, len(self.segments))
+            if not self.segments[i].is_empty
+        }
+        return host, caches, entering, chosen, logits, alive_after_seg
+
+    def step(self, tok: jax.Array, pos, caches: Any) -> tuple[TierStepResult, Any]:
+        """One decode step across all tiers: exactly one host sync (plus
+        one per rare overflow-retry iteration, see module docstring)."""
+        cfg = self.cfg
+        batch = tok.shape[0]
+        buckets = self._plan_buckets(batch)
+        host, new_caches, entering, chosen, logits, alive = self._run_once(
+            tok, pos, caches, buckets
+        )
+        used = {
+            i: min(buckets.get(i, batch), batch) for i in entering
+        }
+        # Exit-rate spike: true survivors overflowed a planned bucket, so
+        # excluded survivors carry garbage.  Re-run the whole step from the
+        # entry caches with measured buckets — correctness is never traded
+        # for the fast path.  One pass is NOT always enough: an excluded
+        # survivor's garbage forward pass can spuriously "exit" at a later
+        # segment's branch, undercounting that segment's true survivors,
+        # so re-check after every run.  Segments before the earliest
+        # overflow have exact counts, so each iteration fixes at least
+        # that segment (buckets are merged monotonically non-decreasing)
+        # and the loop terminates in <= K runs; a belt-and-braces cap
+        # falls back to guaranteed-fit full-batch buckets.
+        attempts = 0
+        while any(entering[i] > used[i] for i in entering):
+            self.overflow_retries += 1
+            attempts += 1
+            if attempts >= len(self.segments):
+                buckets = {i: batch for i in entering}
+            else:
+                buckets = {
+                    i: max(
+                        min(buckets.get(i, 1), batch),
+                        bucket_for(entering[i], batch),
+                    )
+                    for i in entering
+                }
+            host, new_caches, entering, chosen, logits, alive = self._run_once(
+                tok, pos, caches, buckets
+            )
+            used = {i: min(buckets.get(i, batch), batch) for i in entering}
+        self._hints = dict(entering)
+
+        # Per-branch attribution from the fetched masks.
         exit_tier = np.full((batch,), -1, np.int32)
         branch_take: dict[int, np.ndarray] = {}
         branch_entropy: dict[int, np.ndarray] = {}
-        for i, layers in seg_branches:
-            for row, layer in enumerate(layers):
+        for i, seg in enumerate(self.segments):
+            for row, layer in enumerate(seg.branches):
                 mask = host[f"take{i}"][row]
                 branch_take[layer] = mask
                 branch_entropy[layer] = host[f"ents{i}"][row]
                 exit_tier[mask] = i
-        exited_run = np.zeros((batch,), bool)
-        alive_after_seg = {}
-        for i, seg in enumerate(self.segments):
-            for layer in seg.branches:
-                exited_run |= branch_take[layer]
-            alive_after_seg[i] = int(batch - exited_run.sum())
 
         # Hops: one per cut that still has layers (or the head) downstream.
-        shipped, nbytes = [], []
+        shipped, nbytes, compaction = [], [], []
         for j in range(self._head_idx):
             cut = self.segments[j].layer_hi
-            alive = alive_after_seg[j]
-            shipped.append(alive)
-            nbytes.append(alive * bytes_per_sequence(cfg, cut))
+            alive_j = alive[j]
+            shipped.append(alive_j)
+            nbytes.append(alive_j * bytes_per_sequence(cfg, cut))
+            nxt = next(
+                i for i in range(j + 1, len(self.segments))
+                if not self.segments[i].is_empty
+            )
+            compaction.append(HopCompaction(alive_j, used.get(nxt, batch)))
+
+        sim = ()
+        if self.simulate_network:
+            sim = tuple(
+                nb * 8.0 / self.segments[j].uplink_bps
+                if self.segments[j].uplink_bps else 0.0
+                for j, nb in enumerate(nbytes)
+            )
+            total = sum(sim)
+            if total > 0:
+                time.sleep(total)
 
         result = TierStepResult(
             tokens=host["tokens"],
@@ -310,5 +537,7 @@ class TierExecutor:
             bytes_per_hop=tuple(nbytes),
             tokens_dev=chosen,
             last_logits=logits,
+            compaction=tuple(compaction),
+            sim_transfer_s=sim,
         )
-        return result, caches
+        return result, new_caches

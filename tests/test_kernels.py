@@ -69,6 +69,50 @@ class TestFlashDecode:
         np.testing.assert_allclose(np.asarray(o, np.float32),
                                    np.asarray(r, np.float32), **tol(dtype))
 
+    def test_per_sequence_slot_validity(self):
+        """(B, C) k_pos: each sequence masks its own holes (the compacted
+        runtime leaves -1 slots in rows that skipped a step downstream)."""
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        b, h, kh, d, c, length = 3, 8, 2, 64, 512, 300
+        q = jax.random.normal(ks[0], (b, h, d))
+        k = jax.random.normal(ks[1], (b, c, kh, d))
+        v = jax.random.normal(ks[2], (b, c, kh, d))
+        pos = np.full((b, c), -1, np.int32)
+        rng = np.random.default_rng(7)
+        for r in range(b):
+            pos[r, :length] = np.arange(length)
+            pos[r, rng.choice(length, size=40, replace=False)] = -1  # holes
+        pos = jnp.asarray(pos)
+        qpos = jnp.asarray(length, jnp.int32)
+        o = flash_decode_pallas(q, k, v, pos, qpos, interpret=True)
+        r = ref.flash_decode_ref(q, k, v, pos, qpos)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-4,
+                                   atol=2e-4)
+
+    def test_survivor_row_map(self):
+        """rows scalar-prefetch: a compacted sub-batch attends in place
+        against survivor rows of a larger resident cache."""
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        bc, b, h, kh, d, c, length = 6, 2, 8, 2, 64, 256, 200
+        q = jax.random.normal(ks[0], (b, h, d))
+        k = jax.random.normal(ks[1], (bc, c, kh, d))
+        v = jax.random.normal(ks[2], (bc, c, kh, d))
+        pos = np.full((bc, c), -1, np.int32)
+        pos[:, :length] = np.arange(length)
+        pos = jnp.asarray(pos)
+        qpos = jnp.asarray(length, jnp.int32)
+        rows = jnp.asarray([5, 2], jnp.int32)
+        o = flash_decode_pallas(q, k, v, pos, qpos, rows, interpret=True)
+        r = ref.flash_decode_ref(q, k, v, pos, qpos, rows)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-4,
+                                   atol=2e-4)
+        # Identical to gathering the cache rows up front.
+        o2 = flash_decode_pallas(
+            q, k[rows], v[rows], pos[rows], qpos, interpret=True
+        )
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o2), rtol=1e-5,
+                                   atol=1e-5)
+
     def test_ring_cache_order_irrelevant(self):
         """Attention must depend on stored positions, not slot order."""
         ks = jax.random.split(jax.random.PRNGKey(0), 3)

@@ -1,6 +1,15 @@
 #!/bin/sh
-# Tier-1 CI entry: run the test suite exactly as ROADMAP.md specifies.
+# Tier-1 CI entry: run the test suite exactly as ROADMAP.md specifies
+# (tests/test_compaction.py and the runtime/controller suites are part of
+# the default collection), then smoke-run the serving benchmark sweep in
+# fast mode so the masked-vs-compacted FLOPs assertion and the 1-sync
+# invariant are exercised end to end on every CI pass.
 # Usage: tools/ci.sh [extra pytest args]
+#   REPRO_CI_BENCH=0 skips the benchmark smoke (pytest only).
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+if [ "${REPRO_CI_BENCH:-1}" != "0" ]; then
+    REPRO_BENCH_FAST=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python benchmarks/serving_step.py
+fi
