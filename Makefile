@@ -1,6 +1,6 @@
 PY := python
 
-.PHONY: test test-fast bench-serving bench-serving-fast example
+.PHONY: test test-fast bench-serving bench-serving-fast bench-overlap example
 
 # Tier-1 verify (ROADMAP): the full suite with the src layout on the path.
 test:
@@ -15,6 +15,11 @@ bench-serving:
 # CI smoke: one batch/split/regime cell, short step counts.
 bench-serving-fast:
 	REPRO_BENCH_FAST=1 PYTHONPATH=src $(PY) benchmarks/serving_step.py
+
+# Serial-vs-pipelined overlap cell only: asserts pipelined steady-state
+# step time <= serial under simulate_network=True and the plan flip.
+bench-overlap:
+	REPRO_BENCH_FAST=1 REPRO_BENCH_ONLY=overlap PYTHONPATH=src $(PY) benchmarks/serving_step.py
 
 example:
 	PYTHONPATH=src $(PY) examples/serve_partitioned.py

@@ -1,5 +1,5 @@
-"""Serving decode-step benchmark: host syncs, wall time, and a
-roofline-style masked-vs-compacted sweep.
+"""Serving decode-step benchmark: host syncs, wall time, a roofline-style
+masked-vs-compacted sweep, and a serial-vs-pipelined overlap cell.
 
 Part 1 (legacy vs fused): before the unified tier runtime, every decode
 step crossed the device boundary once per side branch *twice* (entropy
@@ -16,8 +16,19 @@ are analytic (2 * active params per layer per row * rows), so the sweep
 shows the *shape* win even on CPU where wall time is noisy; syncs/step
 and retry counts come from the executor's own counters.
 
+Part 3 (overlap pipeline): under ``simulate_network=True`` with a
+transfer-dominated K=3 profile, the serial runtime pays the chain sum
+``compute + sum_j(transfer_j)`` per decode step while
+``overlap="pipelined"`` pays the bottleneck stage
+``max_j(compute_j, transfer_j)``; the cell asserts pipelined <= serial,
+that the pipelined wall time agrees with
+``expected_time_multitier(..., overlap=True)``, and that the cost model's
+optimal cut *moves* when solved under overlap (the plan flip that
+motivates re-solving on pipelined deployments).
+
 Run:  PYTHONPATH=src python benchmarks/serving_step.py
 Fast CI smoke:  REPRO_BENCH_FAST=1 PYTHONPATH=src python benchmarks/serving_step.py
+Overlap cell only:  REPRO_BENCH_ONLY=overlap PYTHONPATH=src python benchmarks/serving_step.py
 """
 
 import dataclasses
@@ -29,10 +40,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.multitier import TierSpec, expected_time_multitier, solve_multitier
 from repro.models import model as M
-from repro.serving import PartitionedServer
+from repro.serving import MultiTierServer, PartitionedServer
 
 FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
+ONLY = os.environ.get("REPRO_BENCH_ONLY", "")
 
 CONTEXT = 128
 STEPS = 8 if FAST else 32
@@ -219,6 +232,125 @@ def part2_roofline_sweep(cfg0, params):
               "(>=2x saving at exit rate >= 0.5)")
 
 
+def _plan_flip_cell() -> None:
+    """Cost-model cell (no wall clock): on a profile whose transfers shrink
+    with depth, the serial optimum hides on the edge (ship nothing) while
+    the overlap optimum moves the cut forward — transfers below the
+    bottleneck stage are free when pipelined."""
+    t_c = np.array([0.0, 0.01, 0.01, 0.01, 0.01])
+    alpha = np.array([80e3, 40e3, 20e3, 10e3, 5e3])
+    p = np.zeros(5)
+    tiers = [TierSpec("edge", 2.0, 4e6), TierSpec("cloud", 1.0)]
+    print(f"\n{'cut':>4} {'serial ms':>10} {'pipelined ms':>13}")
+    for s in range(len(t_c)):
+        ser = expected_time_multitier(t_c, alpha, p, tiers, (s,))
+        ovl = expected_time_multitier(t_c, alpha, p, tiers, (s,), overlap=True)
+        print(f"{s:>4} {ser * 1e3:>10.1f} {ovl * 1e3:>13.1f}")
+    plan_s = solve_multitier(t_c, alpha, p, tiers)
+    plan_o = solve_multitier(t_c, alpha, p, tiers, overlap=True)
+    print(f"serial plan: cut {plan_s.cut_after} "
+          f"(E[T] {plan_s.expected_time_s * 1e3:.1f} ms) -> "
+          f"pipelined plan: cut {plan_o.cut_after} "
+          f"(E[T]/step {plan_o.expected_time_s * 1e3:.1f} ms)")
+    assert plan_o.cut_after != plan_s.cut_after, (
+        "expected the optimal cut to move under overlap on this profile"
+    )
+    assert plan_o.expected_time_s <= plan_s.expected_time_s + 1e-12
+    print("OK: the optimal cut moves when transfers overlap compute")
+
+
+def _run_overlap(cfg, params, tiers, cuts, overlap, *, batch, steps, warmup):
+    """Measured ms/step of a simulated-uplink K=3 server; the pipelined
+    variant's trailing transfers are drained inside the timed region so
+    both modes account for identical total work."""
+    srv = MultiTierServer(
+        cfg, params, tiers, cuts, simulate_network=True, overlap=overlap
+    )
+    caches = M.init_caches(cfg, batch, CONTEXT)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    for i in range(warmup):
+        rep, caches = srv.step(tok, i, caches)
+        tok = jnp.asarray(rep.tokens[:, None])
+    srv.executor.drain()
+    t0 = time.perf_counter()
+    for i in range(warmup, warmup + steps):
+        rep, caches = srv.step(tok, i, caches)
+        tok = jnp.asarray(rep.tokens[:, None])
+    srv.executor.drain()
+    dt = time.perf_counter() - t0
+    return dt / steps * 1e3, rep.sim_transfer_s
+
+
+def part3_overlap_pipeline(cfg0, params):
+    print("\n== overlap cell: serial vs pipelined tier runtime "
+          "(simulate_network=True) ==")
+    _plan_flip_cell()
+
+    # Transfer-dominated K=3 smoke: no exits, so every sequence crosses
+    # both hops and the transfer sizes are deterministic.
+    cfg = dataclasses.replace(cfg0, exit_threshold=0.0)
+    batch = BATCH
+    steps = 6 if FAST else 12
+    per_seq = cfg.d_model * 2.0
+    hop_s = (0.09, 0.05)  # target per-hop transfer seconds at full batch
+    tiers = [
+        TierSpec("device", 1.0, per_seq * batch * 8.0 / hop_s[0]),
+        TierSpec("edge", 1.0, per_seq * batch * 8.0 / hop_s[1]),
+        TierSpec("cloud", 1.0),
+    ]
+    cuts = (2, 3)
+    t_serial, sim = _run_overlap(
+        cfg, params, tiers, cuts, "serial",
+        batch=batch, steps=steps, warmup=WARMUP,
+    )
+    t_pipe, _ = _run_overlap(
+        cfg, params, tiers, cuts, "pipelined",
+        batch=batch, steps=steps, warmup=WARMUP,
+    )
+    # Compute-only baseline calibrates the cost model's t_c (uniform
+    # per-layer split of the measured masked step on this host).
+    srv = MultiTierServer(cfg, params, tiers, cuts)
+    caches = M.init_caches(cfg, batch, CONTEXT)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    for i in range(WARMUP):
+        rep, caches = srv.step(tok, i, caches)
+        tok = jnp.asarray(rep.tokens[:, None])
+    t0 = time.perf_counter()
+    for i in range(WARMUP, WARMUP + steps):
+        rep, caches = srv.step(tok, i, caches)
+        tok = jnp.asarray(rep.tokens[:, None])
+    t_comp = (time.perf_counter() - t0) / steps
+
+    n = cfg.num_layers
+    t_c = np.concatenate([[0.0], np.full(n, t_comp / n)])
+    alpha = np.full(n + 1, per_seq * batch)  # full batch crosses every hop
+    p = np.zeros(n + 1)
+    est_serial = expected_time_multitier(t_c, alpha, p, tiers, cuts)
+    est_pipe = expected_time_multitier(t_c, alpha, p, tiers, cuts,
+                                       overlap=True)
+    print(f"\n{'mode':<12} {'ms/step':>9} {'est ms/step':>12} "
+          f"(hop transfers {tuple(round(s * 1e3) for s in sim)} ms)")
+    print(f"{'serial':<12} {t_serial:>9.1f} {est_serial * 1e3:>12.1f}")
+    print(f"{'pipelined':<12} {t_pipe:>9.1f} {est_pipe * 1e3:>12.1f}")
+
+    assert t_pipe <= t_serial, (
+        f"pipelined steady-state step ({t_pipe:.1f} ms) must not exceed "
+        f"serial ({t_serial:.1f} ms)"
+    )
+    # The pipelined wall time tracks the bottleneck stage, not the serial
+    # sum: agreement with the overlap cost model within a pipeline-fill
+    # tolerance (compute overhead + the non-bottleneck hop's tail).
+    slack = 1e3 * (t_comp + min(hop_s)) + 0.25 * est_pipe * 1e3
+    assert abs(t_pipe - est_pipe * 1e3) <= slack, (
+        f"pipelined {t_pipe:.1f} ms/step vs overlap estimate "
+        f"{est_pipe * 1e3:.1f} ms/step (slack {slack:.1f})"
+    )
+    assert t_serial >= est_pipe * 1e3  # serial pays at least the bottleneck
+    print(f"OK: pipelined step tracks max_j(compute_j, transfer_j) "
+          f"({t_pipe:.1f} ms vs est {est_pipe * 1e3:.1f} ms; serial pays "
+          f"{t_serial:.1f} ms)")
+
+
 def main() -> None:
     cfg = dataclasses.replace(
         get_smoke_config("qwen3_8b"), num_layers=4, branch_layers=(1, 3)
@@ -228,8 +360,12 @@ def main() -> None:
           f"branches {cfg.branch_layers}, batch {BATCH}"
           f"{' [fast mode]' if FAST else ''}")
 
+    if ONLY == "overlap":
+        part3_overlap_pipeline(cfg, params)
+        return
     part1_legacy_vs_fused(cfg, params)
     part2_roofline_sweep(cfg, params)
+    part3_overlap_pipeline(cfg, params)
 
 
 if __name__ == "__main__":

@@ -156,6 +156,46 @@ def main() -> None:
               f"({hop.padded_waste} padding rows), "
               f"{srv3.executor.overflow_retries} overflow retries total")
 
+    # ---- pipelined overlap: the serial runtime pays compute + every hop's
+    # transfer per step; overlap="pipelined" overlaps transfers with the
+    # next step's compute, so the steady-state step cost is the bottleneck
+    # stage max_j(compute_j, transfer_j).  The optimal cut can MOVE under
+    # overlap — re-solve with overlap=True before installing.
+    plan3o = solve_multitier(
+        profile.t_c, profile.alpha, profile.branch_exit_probs(), tiers,
+        overlap=True,
+    )
+    print(f"\n== pipelined K=3: serial plan cuts {plan3.cut_after} "
+          f"(E[T] {plan3.expected_time_s * 1e3:.2f} ms) vs overlap plan "
+          f"cuts {plan3o.cut_after} "
+          f"(E[T]/step {plan3o.expected_time_s * 1e3:.2f} ms)")
+    per_seq = bytes_per_sequence(cfg, 2)
+    sim_tiers = [  # ~35 ms / ~20 ms per-hop transfers at full batch
+        TierSpec("device", 60.0, per_seq * BATCH * 8.0 / 0.035),
+        TierSpec("edge", 12.0, per_seq * BATCH * 8.0 / 0.020),
+        TierSpec("cloud", 1.0),
+    ]
+    for overlap in ("serial", "pipelined"):
+        srvp = MultiTierServer(
+            cfg, params, sim_tiers, (2, 3),
+            cost=(profile.t_c, profile.alpha),
+            simulate_network=True, overlap=overlap,
+        )
+        caches = M.init_caches(cfg, BATCH, CONTEXT)
+        tok = jnp.zeros((BATCH, 1), jnp.int32)
+        repp, caches = srvp.step(tok, PROMPT, caches)  # warm the jit
+        tok = jnp.asarray(repp.tokens[:, None])
+        srvp.executor.drain()  # don't time the warmup step's transfers
+        t0 = time.perf_counter()
+        for i in range(1, DECODE_STEPS):
+            repp, caches = srvp.step(tok, PROMPT + i, caches)
+            tok = jnp.asarray(repp.tokens[:, None])
+        srvp.executor.drain()  # account the trailing in-flight transfers
+        dt = (time.perf_counter() - t0) / (DECODE_STEPS - 1)
+        print(f"   {overlap:<9} {dt * 1e3:7.1f} ms/step "
+              f"(sim transfers {tuple(round(s * 1e3) for s in repp.sim_transfer_s)} ms, "
+              f"est E[T]/step {repp.est_latency_s * 1e3:.2f} ms)")
+
 
 if __name__ == "__main__":
     main()

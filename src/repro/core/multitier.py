@@ -15,6 +15,22 @@ layered (layer x tier) lattice:
 
 Solved by DP over the lattice (topological order), O(N * K).
 With K == 2 this reduces to the paper's problem; tests assert agreement.
+
+Overlap (pipelined) mode.  The serial cost above is the latency of one
+isolated sample: every stage waits for the previous one.  A pipelined
+deployment (``overlap=True``) overlaps tier j's uplink transfer with tier
+j+1's compute and double-buffers decode steps, so the *steady-state* cost
+per step is the pipeline bottleneck stage
+
+    max_j( compute_j, transfer_j )
+
+rather than the serial sum — matching ``TierExecutor(overlap="pipelined")``.
+Per-stage weights (reach / bucketed padding) are identical to serial mode;
+only the aggregation changes.  A bottleneck is not edge-decomposable over
+the lattice, so the overlap solve enumerates monotone cut vectors directly
+(K keeps the combinatorics tiny); above ``_BUCKETED_ENUM_CAP`` candidates
+it falls back to the serial DP's cuts re-scored under overlap (documented
+approximation).
 """
 
 from __future__ import annotations
@@ -87,27 +103,63 @@ def _padded_frac(reach_i: float, batch: int) -> float:
     return bucket_for(n, batch) / batch
 
 
-#: Above this many candidate cut vectors the bucketed solve falls back to
-#: the (approximate) lattice DP instead of exact enumeration.
+def _hop_seconds(bits: float, uplink_bps: float) -> float:
+    """Transfer seconds for ``bits`` over a hop.  A hop that ships nothing
+    is free; a hop that ships over an unset/zero uplink is unusable
+    (infinite cost), never a ZeroDivisionError."""
+    if bits <= 0.0:
+        return 0.0
+    if not uplink_bps or uplink_bps <= 0.0:
+        return math.inf
+    return bits / uplink_bps
+
+
+def _infeasible_error(tiers: list[TierSpec]) -> ValueError:
+    """Diagnostic for a profile with no finite-cost plan, naming the first
+    unreachable tier when a dead uplink is the culprit."""
+    dead = next(
+        (j for j in range(len(tiers) - 1)
+         if not tiers[j].uplink_bps or tiers[j].uplink_bps <= 0.0),
+        None,
+    )
+    detail = (
+        f"tier {tiers[dead + 1].name!r} is unreachable "
+        f"(tier {tiers[dead].name!r} has uplink_bps="
+        f"{tiers[dead].uplink_bps!r})"
+        if dead is not None
+        else "check the t_c/alpha/gamma profile for infs or NaNs"
+    )
+    return ValueError(f"no finite-cost multi-tier plan: {detail}")
+
+
+#: Above this many candidate cut vectors the bucketed/overlap solve falls
+#: back to the (approximate) lattice DP instead of exact enumeration.
 _BUCKETED_ENUM_CAP = 50_000
 
 
-def _solve_bucketed_exact(t_c, alpha, p, tiers, batch) -> "MultiTierPlan | None":
-    """Exact bucketed solve: argmin over monotone cut vectors of the
-    entry-frozen closed form.  Returns None when the enumeration would
-    exceed ``_BUCKETED_ENUM_CAP`` (caller falls back to the DP)."""
+def _solve_enumerated(t_c, alpha, p, tiers, batch, overlap) -> "MultiTierPlan | None":
+    """Exact solve by enumeration: argmin over monotone cut vectors of the
+    closed-form fixed-cut cost (entry-frozen bucketed and/or pipelined).
+    Returns None when the enumeration would exceed ``_BUCKETED_ENUM_CAP``
+    (caller falls back to the DP)."""
     n = len(t_c) - 1
     k = len(tiers)
     if k == 1:
-        cost = expected_time_multitier(t_c, alpha, p, tiers, (), batch=batch)
+        cost = expected_time_multitier(
+            t_c, alpha, p, tiers, (), batch=batch, overlap=overlap
+        )
         return MultiTierPlan((), cost, tuple([0] * n))
     if math.comb(n + k - 1, k - 1) > _BUCKETED_ENUM_CAP:
         return None
     best_cost, best_cuts = np.inf, None
     for cuts in itertools.combinations_with_replacement(range(n + 1), k - 1):
-        c = expected_time_multitier(t_c, alpha, p, tiers, cuts, batch=batch)
+        c = expected_time_multitier(
+            t_c, alpha, p, tiers, cuts, batch=batch, overlap=overlap
+        )
         if c < best_cost:
             best_cost, best_cuts = c, cuts
+    if best_cuts is None:
+        raise _infeasible_error(tiers)
     bounds = (0, *best_cuts, n)
     tier_of_layer: list[int] = []
     for j in range(k):
@@ -121,6 +173,8 @@ def solve_multitier(
     branch_probs: np.ndarray,  # (N+1,) conditional exit prob per layer
     tiers: list[TierSpec],
     batch: int | None = None,
+    *,
+    overlap: bool = False,
 ) -> MultiTierPlan:
     """``batch=None`` is the paper's ideal per-sample model: every layer's
     cost is weighted by the probability the sample still runs it.
@@ -139,6 +193,12 @@ def solve_multitier(
     tier 0), a documented approximation.  Hop transfer is always
     reach-weighted: the wire ships true survivors, padding is a
     compute-shape artifact.
+
+    ``overlap=True`` optimizes the pipelined runtime's steady-state step
+    cost (the bottleneck stage ``max_j(compute_j, transfer_j)``) instead of
+    the serial sum — see the module docstring.  Like the bucketed case it
+    enumerates cut vectors; above the cap the serial DP's cuts are kept and
+    re-scored under overlap (a documented approximation).
     """
     t_c = np.asarray(t_c, float)
     alpha = np.asarray(alpha, float)
@@ -147,10 +207,21 @@ def solve_multitier(
     k = len(tiers)
     assert k >= 1
 
-    if batch is not None:
-        plan = _solve_bucketed_exact(t_c, alpha, p, tiers, batch)
+    if batch is not None or overlap:
+        plan = _solve_enumerated(t_c, alpha, p, tiers, batch, overlap)
         if plan is not None:
             return plan
+    if overlap:
+        # Enumeration overflowed the cap: take the serial DP's plan and
+        # re-score it under the overlap cost.
+        plan = solve_multitier(t_c, alpha, p, tiers, batch)
+        return dataclasses.replace(
+            plan,
+            expected_time_s=expected_time_multitier(
+                t_c, alpha, p, tiers, plan.cut_after, batch=batch,
+                overlap=True,
+            ),
+        )
 
     surv = np.cumprod(1.0 - p)  # surv[i] = alive after layer i's branch
     reach = np.concatenate([[1.0], surv[:-1]])  # alive entering layer i
@@ -173,7 +244,9 @@ def solve_multitier(
     parent = np.full((n + 1, max(last, 1), 2), -1, dtype=int)
     dist[0][0] = 0.0
     for j in range(1, last):
-        cand = dist[0][j - 1] + alpha[0] * 8.0 / tiers[j - 1].uplink_bps
+        cand = dist[0][j - 1] + _hop_seconds(
+            alpha[0] * 8.0, tiers[j - 1].uplink_bps
+        )
         if cand < dist[0][j]:
             dist[0][j] = cand
             parent[0][j] = (0, j - 1)
@@ -184,7 +257,9 @@ def solve_multitier(
                 dist[i][j] = cand
                 parent[i][j] = (i - 1, j)
         for j in range(1, last):
-            cand = dist[i][j - 1] + reach[i] * alpha[i] * 8.0 / tiers[j - 1].uplink_bps
+            cand = dist[i][j - 1] + _hop_seconds(
+                reach[i] * alpha[i] * 8.0, tiers[j - 1].uplink_bps
+            )
             if cand < dist[i][j]:
                 dist[i][j] = cand
                 parent[i][j] = (i, j - 1)
@@ -192,6 +267,7 @@ def solve_multitier(
     # Closed-form frozen tail on the last tier (no branches there).
     tail = np.concatenate([np.cumsum(t_c[::-1])[::-1][1:], [0.0]])
     best_cost, best_i, end_on_last = np.inf, n, False
+    best_j_final: int | None = None
     if last >= 1:
         for j in range(last):
             if dist[n][j] < best_cost:  # finish without reaching the cloud
@@ -200,7 +276,7 @@ def solve_multitier(
         for i in range(0, n + 1):
             tail_w = reach[i] if batch is None else _padded_frac(reach[i], batch)
             hop = dist[i][last - 1] + (
-                reach[i] * alpha[i] * 8.0 / tiers[last - 1].uplink_bps
+                _hop_seconds(reach[i] * alpha[i] * 8.0, tiers[last - 1].uplink_bps)
                 + tail_w * tiers[last].gamma * tail[i]
             )
             if hop < best_cost:
@@ -210,6 +286,11 @@ def solve_multitier(
         w1 = reach[1:] if batch is None else np.ones(n)
         best_cost = float(np.sum(w1 * tiers[0].gamma * t_c[1:]))
         best_i, end_on_last, best_j_final = n, False, 0
+
+    if best_j_final is None or not np.isfinite(best_cost):
+        # Degenerate profile: no candidate assignment has finite cost (a
+        # clear diagnostic instead of the historical UnboundLocalError).
+        raise _infeasible_error(tiers)
 
     # Backtrack the branchy-tier assignment up to best_i.
     tier_of_layer = [last] * (n + 1)
@@ -240,6 +321,8 @@ def expected_time_multitier(
     tiers: list[TierSpec],
     cuts: tuple[int, ...],
     batch: int | None = None,
+    *,
+    overlap: bool = False,
 ) -> float:
     """Closed-form E[T] of one *fixed* monotone cut vector (the plan the
     runtime executes), same semantics as :func:`solve_multitier`: branches
@@ -251,6 +334,15 @@ def expected_time_multitier(
     bucket its entering survivors were padded to — *frozen at tier entry*
     (the runtime recompacts only at hops), so this is exact for the
     executed plan, padding waste included.  Transfers stay reach-weighted.
+
+    ``overlap=True`` returns the pipelined runtime's steady-state step
+    cost: the bottleneck stage ``max_j(compute_j, transfer_j)`` over the
+    2K-1 pipeline stages (K tier computes interleaved with K-1 hop
+    transfers) instead of their serial sum.  Per-stage weights are
+    unchanged.  This models the real multi-host deployment where tiers
+    compute concurrently; the single-host simulator serializes tier
+    computes, so it matches this cost only when transfers dominate (see
+    the ``serving.tiers`` module docstring).
     """
     t_c = np.asarray(t_c, float)
     alpha = np.asarray(alpha, float)
@@ -266,7 +358,8 @@ def expected_time_multitier(
     surv = np.cumprod(1.0 - p)
     reach = np.concatenate([[1.0], surv[:-1]])
     entry = next((j for j in range(k) if bounds[j] < bounds[j + 1]), None)
-    cost = 0.0
+    compute = [0.0] * k  # per-tier compute stage
+    xfer = [0.0] * max(k - 1, 0)  # per-hop transfer stage
     for j in range(k):
         lo, hi = bounds[j], bounds[j + 1]
         for i in range(lo + 1, hi + 1):
@@ -274,12 +367,16 @@ def expected_time_multitier(
                 w = reach[bounds[k - 1]] if (j == k - 1 and k > 1) else reach[i]
             else:
                 w = 1.0 if j == entry else _padded_frac(reach[lo], batch)
-            cost += w * tiers[j].gamma * t_c[i]
+            compute[j] += w * tiers[j].gamma * t_c[i]
     for j in range(k - 1):
         c = bounds[j + 1]
         if c < n:  # layers still run downstream -> the hop really happens
-            cost += reach[c] * alpha[c] * 8.0 / tiers[j].uplink_bps
-    return float(cost)
+            xfer[j] = _hop_seconds(
+                reach[c] * alpha[c] * 8.0, tiers[j].uplink_bps
+            )
+    if overlap:
+        return float(max(compute + xfer))
+    return float(sum(compute) + sum(xfer))
 
 
 def from_cost_profile(profile: CostProfile, tiers: list[TierSpec]) -> MultiTierPlan:

@@ -21,9 +21,13 @@ Three triggers are supported:
 
 Swaps go through ``TierExecutor.install``, which re-uses the compiled
 function of every tier segment whose (layer range, branches) is unchanged
-— repartitioning never pays a full re-jit.  When ``batch`` is set, K>=3
-solves use the bucketed lattice cost (core.multitier) so the plan is
-honest about the compacted runtime's padding waste.
+— repartitioning never pays a full re-jit.  When ``batch`` is set and the
+server compacts, solves (K=2 and K>=3 alike) use the bucketed lattice
+cost (core.multitier) so the plan is honest about the compacted runtime's
+padding waste.  A server running
+``overlap="pipelined"`` is re-solved against the pipeline-bottleneck
+steady-state cost (``overlap=True`` in core.multitier) — the optimal cut
+generally moves when transfers overlap compute.
 """
 
 from __future__ import annotations
@@ -76,7 +80,7 @@ class RepartitionController:
     tiers: list[TierSpec] | None = None  # required for MultiTierServer
     kl_threshold: float | None = None  # drift gate for observe()-driven solves
     every_n_steps: int = 0  # decode-loop hook cadence (0 = explicit only)
-    batch: int | None = None  # bucketed-aware K>=3 solving
+    batch: int | None = None  # bucketed-aware solving (K=2 and K>=3)
     window_steps: int = 256  # drift-window decay horizon (see observe())
 
     def __post_init__(self):
@@ -99,12 +103,39 @@ class RepartitionController:
 
     # ------------------------------------------------------------ solving
     def solve(self, p_k: np.ndarray) -> tuple[int, ...]:
-        """Optimal cut vector for the profile with live exit probs."""
+        """Optimal cut vector for the profile with live exit probs.  A
+        server running ``overlap="pipelined"`` is solved against the
+        pipeline-bottleneck steady-state cost (the optimal cut can move
+        under overlap), a serial server against the serial chain sum."""
         prof = Partitioner(self.profile).with_exit_probs(p_k).profile
+        overlap = getattr(self.server, "overlap", "serial") == "pipelined"
         if isinstance(self.server, MultiTierServer):
             plan = solve_multitier(
                 prof.t_c, prof.alpha, prof.branch_exit_probs(), self.tiers,
                 batch=self.batch,
+                overlap=overlap,
+            )
+            return plan.cut_after
+        bucketed = (
+            self.batch is not None
+            and getattr(self.server, "compaction", "off") == "bucketed"
+        )
+        if overlap or bucketed:
+            # 2-tier pipelined and/or bucketed: the paper's Dijkstra
+            # minimizes the ideal serial sum; route through the unified
+            # lattice cost instead so the installed cut optimizes the same
+            # objective the server's est_latency_s reports (bottleneck
+            # stage under overlap, padding-honest under compaction).  The
+            # lattice model (like the paper's Eq. 5) neglects branch-head
+            # compute, so a profile with include_branch_compute=True is
+            # optimized without the gamma * t_b edge terms here.
+            tiers = [
+                TierSpec("edge", prof.gamma, prof.network.bandwidth_bps),
+                TierSpec("cloud", 1.0),
+            ]
+            plan = solve_multitier(
+                prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers,
+                batch=self.batch if bucketed else None, overlap=overlap,
             )
             return plan.cut_after
         return (Partitioner(prof).solve().split_layer,)

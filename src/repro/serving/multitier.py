@@ -22,7 +22,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.multitier import MultiTierPlan, TierSpec, expected_time_multitier
-from repro.serving.tiers import HopCompaction, TierExecutor, segments_for_cuts
+from repro.serving.tiers import (
+    HopCompaction,
+    TierExecutor,
+    segments_for_cuts,
+    transfer_seconds,
+)
 
 __all__ = ["MultiTierServer", "MultiTierStepReport"]
 
@@ -50,6 +55,7 @@ class MultiTierServer:
     cost: tuple[np.ndarray, np.ndarray] | None = None  # (t_c, alpha) estimates
     compaction: str = "bucketed"  # "off" = legacy masked full-batch tiers
     simulate_network: bool = False  # sleep each hop's transfer time
+    overlap: str = "serial"  # "pipelined" = overlap transfers with compute
 
     def __post_init__(self):
         self.tiers = tuple(self.tiers)
@@ -63,6 +69,7 @@ class MultiTierServer:
             self.cfg, self.params, self._segments(self.cuts),
             compaction=self.compaction,
             simulate_network=self.simulate_network,
+            overlap=self.overlap,
         )
 
     @classmethod
@@ -102,8 +109,11 @@ class MultiTierServer:
         self, tok: jax.Array, pos: int, caches: Any
     ) -> tuple[MultiTierStepReport, Any]:
         res, caches = self.executor.step(tok, pos, caches)
+        # A hop whose bandwidth was never set (TierSpec.uplink_bps defaults
+        # to 0.0) reports 0.0 transfer time, matching the executor's
+        # sim_transfer_s accounting, instead of dividing by zero.
         transfer = tuple(
-            nb * 8.0 / self.tiers[j].uplink_bps
+            transfer_seconds(nb, self.tiers[j].uplink_bps)
             for j, nb in enumerate(res.bytes_per_hop)
         )
         rep = MultiTierStepReport(
@@ -124,7 +134,8 @@ class MultiTierServer:
         """Lattice cost model (core.multitier) at the installed cuts with
         the *measured* per-branch exit fractions substituted for p.  When
         the runtime compacts, the estimate uses the bucketed cost so it is
-        honest about padding waste."""
+        honest about padding waste; when it pipelines, the overlap cost so
+        it reports the steady-state bottleneck stage."""
         if self.cost is None:
             return None
         t_c, alpha = self.cost
@@ -138,4 +149,5 @@ class MultiTierServer:
         return expected_time_multitier(
             t_c, alpha, p, list(self.tiers), self.cuts,
             batch=batch if self.compaction == "bucketed" else None,
+            overlap=self.overlap == "pipelined",
         )

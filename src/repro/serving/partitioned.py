@@ -59,12 +59,14 @@ class PartitionedServer:
     cost_profile: CostProfile | None = None  # for latency estimates
     compaction: str = "bucketed"  # "off" = legacy masked full-batch cloud
     simulate_network: bool = False  # sleep each hop's transfer time
+    overlap: str = "serial"  # "pipelined" = overlap transfers with compute
 
     def __post_init__(self):
         self.executor = TierExecutor(
             self.cfg, self.params, self._segments(self.split_layer),
             compaction=self.compaction,
             simulate_network=self.simulate_network,
+            overlap=self.overlap,
         )
 
     def _segments(self, s: int):
@@ -90,40 +92,61 @@ class PartitionedServer:
             exited_on_edge=res.exited,
             shipped=shipped,
             bytes_shipped=nbytes,
-            est_latency_s=self._estimate(
-                self.split_layer, float(res.exited.mean()),
-                res.tokens.shape[0],
-            ),
+            est_latency_s=self._estimate(self.split_layer, res),
             compaction=res.compaction,
             branch_take=res.branch_take,
             sim_transfer_s=res.sim_transfer_s,
         )
         return rep, caches
 
-    def _estimate(self, s: int, exit_frac: float, batch: int) -> float | None:
-        """Paper Eq. 5 evaluated at this split with the *measured* exit
-        fraction substituted for p (closing the calibration loop).
+    def _estimate(self, s: int, res) -> float | None:
+        """Paper Eq. 5 evaluated at this split with the *measured*
+        per-branch conditional exit probabilities substituted for p
+        (closing the calibration loop).
 
-        When the runtime compacts (``compaction="bucketed"``) the estimate
-        instead uses the unified lattice cost with ``batch`` set, so K=2
-        reports the same padding-honest numbers as MultiTierServer rather
-        than the ideal ``surv(s) * B`` cloud term."""
+        Each branch's conditional probability is derived from this step's
+        first-exit masks (``res.branch_take``) the same way
+        ``MultiTierServer._estimate`` does: exits at a branch over the
+        sequences still alive when they reached it.  (Substituting the
+        *cumulative* exit fraction for every branch — the historical
+        behavior — double-counts exits as soon as the plan evaluates two or
+        more branches.)  A branch the installed plan never evaluates
+        (discarded at the cut, or downstream of it) reads p = 0: that is
+        the probability the executed plan actually experiences.
+
+        When the runtime compacts (``compaction="bucketed"``) or pipelines
+        (``overlap="pipelined"``) the estimate uses the unified lattice
+        cost so K=2 reports the same padding-honest / bottleneck-stage
+        numbers as MultiTierServer rather than the ideal serial
+        ``surv(s) * B`` cloud term."""
         if self.cost_profile is None:
             return None
         prof = self.cost_profile
-        if prof.branches and exit_frac > 0:
+        batch = res.tokens.shape[0]
+        if prof.branches:
+            alive = float(batch)
+            measured: dict[int, float] = {}
+            for layer in sorted(res.branch_take):
+                took = float(res.branch_take[layer].sum())
+                measured[layer] = took / alive if alive > 0 else 0.0
+                alive -= took
             branches = tuple(
-                dataclasses.replace(b, exit_prob=min(exit_frac, 1.0))
+                dataclasses.replace(b, exit_prob=measured.get(b.after_layer, 0.0))
                 for b in prof.branches
             )
             prof = dataclasses.replace(prof, branches=branches)
-        if self.compaction == "bucketed" and prof.network is not None:
+        pipelined = self.overlap == "pipelined"
+        if (
+            (self.compaction == "bucketed" or pipelined)
+            and prof.network is not None
+        ):
             tiers = [
                 TierSpec("edge", prof.gamma, prof.network.bandwidth_bps),
                 TierSpec("cloud", 1.0),
             ]
             return expected_time_multitier(
                 prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers, (s,),
-                batch=batch,
+                batch=batch if self.compaction == "bucketed" else None,
+                overlap=pipelined,
             )
         return expected_time(prof, s)

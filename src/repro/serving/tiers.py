@@ -38,6 +38,47 @@ single fused jitted call that
      device->host sync of the packed full-batch pytree, and
      :class:`TierStepResult`'s contract is unchanged.
 
+Pipelined overlap (``overlap="pipelined"``)
+-------------------------------------------
+Serial mode charges one decode step the full chain latency: every tier's
+compute plus, under ``simulate_network``, every hop's transfer, back to
+back.  A real edge->cloud deployment overlaps tier j's uplink transfer
+with tier j+1's compute and double-buffers decode steps: the edge starts
+token t+1 as soon as token t is emitted, while token t's hidden-state
+handoffs are still draining down the chain.  ``overlap="pipelined"``
+reproduces that steady state.  Tier segments are dispatched eagerly (jax
+dispatch is asynchronous, so tier j+1's jitted segment is enqueued the
+moment tier j's hidden-state handoff is traced — nothing blocks on the
+simulated wire), and the simulated per-hop transfers are moved off the
+step's critical path onto per-hop link clocks: hop j's transfer for token
+t occupies the link for ``transfer_j`` seconds starting when both the
+payload has arrived (token t cleared hop j-1) and the link is free (token
+t-1's transfer finished).  A step returns once the *previous* token's
+transfers have fully drained (double-buffer depth 1), so steady-state
+step wall time is the pipeline bottleneck ``max_j(compute_j,
+transfer_j)`` instead of the serial sum.
+
+One single-host caveat: every tier's segment runs on the *same* device
+here, so tier computes serialize and the measured steady state is
+``max(sum_j compute_j, max_j transfer_j)``.  The cost model's
+``overlap=True`` bottleneck takes the max over *per-tier* computes — that
+is the real multi-host deployment the solver plans for, where tier j and
+tier j+1 compute concurrently on different machines.  The two agree
+whenever transfers dominate (the regime the benchmark smoke asserts); on
+compute-bound profiles the simulator cannot deliver the compute overlap
+the model credits.
+
+The pipelined contract extends the one-sync invariant: still exactly one
+fetch per emitted token (the single device->host sync is unchanged, and
+tokens / exit masks / per-hop byte accounting are bitwise identical to
+serial mode — pipelining reorders only the simulated sleeps, never the
+computation).  An overflow-retry step falls back to serial for that step:
+the pipeline is drained first, the step re-runs with measured buckets and
+pays its transfers inline (counted in ``pipeline_fallbacks``), and
+pipelining resumes on the next step.  ``install`` (a repartition) and
+``drain()`` also drain the pipeline so no old-plan transfer overlaps the
+new plan.
+
 Bucket ladder and the one-sync invariant.  jit needs static shapes, so
 sub-batches are padded to :func:`repro.core.multitier.bucket_ladder`
 (powers of two, plus the full batch).  The bucket for step ``t`` is chosen
@@ -93,6 +134,7 @@ __all__ = [
     "HopCompaction",
     "segments_for_cuts",
     "bytes_per_sequence",
+    "transfer_seconds",
     "TOKEN_ID_BYTES",
 ]
 
@@ -133,6 +175,16 @@ class HopCompaction:
     def padded_waste(self) -> int:
         """Padding rows the downstream tier computed but did not need."""
         return self.bucket - self.survivors
+
+
+def transfer_seconds(nbytes: float, uplink_bps: float | None) -> float:
+    """Wall seconds to ship ``nbytes`` over a hop, with the runtime's
+    zero-uplink policy: an unset/zero bandwidth reports 0.0 (the hop is
+    unaccounted, not priced infinite — the *cost model* prices unusable
+    hops at inf via :func:`repro.core.multitier._hop_seconds`)."""
+    if not uplink_bps or uplink_bps <= 0.0:
+        return 0.0
+    return nbytes * 8.0 / uplink_bps
 
 
 def bytes_per_sequence(cfg: ModelConfig, cut_layer: int) -> float:
@@ -219,6 +271,12 @@ class TierExecutor:
     single host sync, sleep for each hop's ``shipped_bytes * 8 /
     uplink_bps`` so measured step time (not just byte accounting) reflects
     the bandwidth cliff.
+
+    ``overlap``: "serial" (default) pays the simulated transfers inline, so
+    a step costs the chain sum; "pipelined" runs the transfers on per-hop
+    link clocks overlapped with the next step's compute and double-buffers
+    decode steps (see the module docstring) — steady-state step wall time
+    is the bottleneck stage, tokens stay bitwise identical.
     """
 
     def __init__(
@@ -229,25 +287,39 @@ class TierExecutor:
         *,
         compaction: str = "bucketed",
         simulate_network: bool = False,
+        overlap: str = "serial",
     ):
         if compaction not in ("bucketed", "off"):
             raise ValueError(f"unknown compaction mode: {compaction!r}")
+        if overlap not in ("serial", "pipelined"):
+            raise ValueError(f"unknown overlap mode: {overlap!r}")
         self.cfg = cfg
         self.params = params
         self.compaction = compaction
         self.simulate_network = simulate_network
+        self.overlap = overlap
         self.total_layers = sum(n for _, _, n in trunk_layout(cfg))
         self._fn_cache: dict[tuple, Any] = {}
         self.host_syncs = 0
         self.overflow_retries = 0
+        #: pipelined steps that fell back to serial (overflow retry drained
+        #: the pipeline and paid its transfers inline).
+        self.pipeline_fallbacks = 0
         #: (spec, bucket) -> number of jax traces (a survivor-count change
         #: within a bucket must not add one).
         self.trace_counts: dict[tuple, int] = {}
+        #: Pipelined-mode simulated network state: per-hop link-free wall
+        #: clocks, and when the previous step's last transfer completes.
+        self._link_free: list[float] = []
+        self._inflight_done = 0.0
         self.install(segments)
 
     # -------------------------------------------------------------- plan
     def install(self, segments: Sequence[TierSegment]) -> None:
-        """Install a new tier plan, re-using compiled unchanged segments."""
+        """Install a new tier plan, re-using compiled unchanged segments.
+        Outstanding pipelined transfers are drained first so no old-plan
+        hop overlaps the new plan."""
+        self.drain()
         segments = tuple(segments)
         if not segments or segments[0].layer_lo != 0:
             raise ValueError("first segment must start at layer 0")
@@ -374,6 +446,38 @@ class TierExecutor:
         jitted = jax.jit(fn)
         self._fn_cache[key] = jitted
         return jitted
+
+    # --------------------------------------------------------- pipelining
+    def drain(self) -> None:
+        """Block until every outstanding pipelined simulated transfer has
+        completed, then reset the link clocks.  No-op in serial mode or
+        when nothing is in flight."""
+        target = max([self._inflight_done, *self._link_free], default=0.0)
+        wait = target - time.perf_counter()
+        if wait > 0:
+            time.sleep(wait)
+        self._link_free = []
+        self._inflight_done = 0.0
+
+    def _pipeline_transfers(self, sim: tuple[float, ...]) -> None:
+        """Schedule this step's simulated hop transfers on the per-hop link
+        clocks and pace the decode loop at double-buffer depth 1: the step
+        returns once the *previous* step's transfers have drained, so the
+        steady-state step period is the pipeline bottleneck stage."""
+        now = time.perf_counter()
+        if len(self._link_free) < len(sim):
+            self._link_free += [0.0] * (len(sim) - len(self._link_free))
+        arrive = now  # payload leaves the entry tier at the sync
+        for j, t in enumerate(sim):
+            # The link takes the payload when it has both arrived (cleared
+            # hop j-1) and the link is free (previous token's hop j done).
+            depart = max(arrive, self._link_free[j])
+            self._link_free[j] = depart + t
+            arrive = self._link_free[j]
+        prev_done, self._inflight_done = self._inflight_done, arrive
+        wait = prev_done - time.perf_counter()
+        if wait > 0:
+            time.sleep(wait)
 
     # -------------------------------------------------------------- step
     def _plan_buckets(self, batch: int) -> dict[int, int]:
@@ -519,13 +623,21 @@ class TierExecutor:
         sim = ()
         if self.simulate_network:
             sim = tuple(
-                nb * 8.0 / self.segments[j].uplink_bps
-                if self.segments[j].uplink_bps else 0.0
+                transfer_seconds(nb, self.segments[j].uplink_bps)
                 for j, nb in enumerate(nbytes)
             )
-            total = sum(sim)
-            if total > 0:
-                time.sleep(total)
+            if self.overlap == "pipelined" and attempts == 0:
+                self._pipeline_transfers(sim)
+            else:
+                if self.overlap == "pipelined":
+                    # Overflow retry: this step already re-ran from the
+                    # entry caches, so fall back to serial for it — drain
+                    # the pipeline, then pay the transfers inline.
+                    self.pipeline_fallbacks += 1
+                    self.drain()
+                total = sum(sim)
+                if total > 0:
+                    time.sleep(total)
 
         result = TierStepResult(
             tokens=host["tokens"],

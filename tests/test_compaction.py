@@ -7,7 +7,10 @@
   * the 1-sync invariant and the overflow-retry escape hatch;
   * no re-jit when only survivor counts change within a bucket;
   * per-hop compaction stats, bucketed cost model, simulated uplink
-    latency, and the repartition controller's drift detection.
+    latency, and the repartition controller's drift detection;
+  * the pipelined overlap mode composed with compaction: bitwise
+    equivalence, the overflow-retry serial fallback, and the
+    steady-state bottleneck-stage wall clock.
 """
 
 import dataclasses
@@ -450,6 +453,128 @@ class TestDriftController:
         assert srv.tiers[0].uplink_bps == 5e5
         rep, _ = srv.step(_toks(cfg, 4), 0, M.init_caches(cfg, 4, 32))
         assert rep.tokens.shape == (4,)
+
+
+class TestPipelinedCompaction:
+    """overlap="pipelined" composed with survivor compaction: bitwise
+    equivalence to the masked serial path across K, the overflow-retry
+    serial fallback, and the steady-state wall-clock win."""
+
+    def _run(self, cfg, params, cuts, *, compaction, overlap, steps,
+             batch=8):
+        # Fast uplinks: microsecond sleeps, so equivalence tests stay quick.
+        uplinks = (1e9,) * len(cuts)
+        ex = TierExecutor(
+            cfg, params, segments_for_cuts(cfg, cuts, uplinks=uplinks),
+            compaction=compaction, simulate_network=True, overlap=overlap,
+        )
+        caches = M.init_caches(cfg, batch, 64)
+        tok = _toks(cfg, batch)
+        out = []
+        for i in range(steps):
+            res, caches = ex.step(tok, i, caches)
+            out.append(res)
+            tok = res.tokens_dev[:, None]
+        ex.drain()
+        return ex, out
+
+    @pytest.mark.parametrize("cuts", [(2,), (2, 3)])
+    def test_bucketed_pipelined_matches_bucketed_serial(self, deep_model, cuts):
+        """Pipelining composes with compaction without touching the
+        trajectory: bucketed+pipelined is bitwise equal to bucketed+serial
+        on every step (and both match the masked path on the first step,
+        before the documented exited-row KV-hole divergence can appear)."""
+        cfg0, params = deep_model
+        cfg = dataclasses.replace(
+            cfg0, exit_threshold=_mixed_threshold(cfg0, params)
+        )
+        _, outs_m = self._run(cfg, params, cuts, compaction="off",
+                              overlap="serial", steps=1)
+        _, outs_s = self._run(cfg, params, cuts, compaction="bucketed",
+                              overlap="serial", steps=4)
+        exp, outs_p = self._run(cfg, params, cuts, compaction="bucketed",
+                                overlap="pipelined", steps=4)
+        np.testing.assert_array_equal(outs_m[0].tokens, outs_p[0].tokens)
+        np.testing.assert_array_equal(outs_m[0].exited, outs_p[0].exited)
+        saw_exit = False
+        for a, b in zip(outs_s, outs_p):
+            saw_exit |= bool(a.exited.any())
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            np.testing.assert_array_equal(a.exited, b.exited)
+            assert a.shipped_per_hop == b.shipped_per_hop
+            assert a.bytes_per_hop == b.bytes_per_hop
+            for c, d in zip(a.compaction, b.compaction):
+                assert c == d
+        assert saw_exit  # the mix regime really exercised compaction
+        # The 1-sync invariant survives overlap: exactly one fetch per
+        # step, plus one per (counted) overflow-retry iteration.
+        assert exp.host_syncs == 4 + exp.overflow_retries
+
+    def test_overflow_retry_falls_back_to_serial(self, deep_model):
+        """An overflow-retry step in pipelined mode drains the pipeline and
+        pays its transfers inline (counted in pipeline_fallbacks); tokens
+        stay bitwise identical to the masked serial path."""
+        cfg0, params = deep_model
+        cfg = dataclasses.replace(cfg0, exit_threshold=0.0)  # no exits
+        exm = TierExecutor(cfg, params, segments_for_cuts(cfg, (2,)),
+                           compaction="off")
+        exc = TierExecutor(
+            cfg, params,
+            segments_for_cuts(cfg, (2,), uplinks=(1e9,)),
+            simulate_network=True, overlap="pipelined",
+        )
+        cm, cc = M.init_caches(cfg, 8, 32), M.init_caches(cfg, 8, 32)
+        tok = _toks(cfg, 8)
+        rm, cm = exm.step(tok, 0, cm)
+        rc, cc = exc.step(tok, 0, cc)
+        np.testing.assert_array_equal(rm.tokens, rc.tokens)
+        exc._hints = {1: 1}  # stale all-exit hint: 8 survivors arrive
+        rm, cm = exm.step(rm.tokens_dev[:, None], 1, cm)
+        rc, cc = exc.step(rc.tokens_dev[:, None], 1, cc)
+        np.testing.assert_array_equal(rm.tokens, rc.tokens)
+        np.testing.assert_array_equal(rm.exited, rc.exited)
+        assert exc.overflow_retries == 1
+        assert exc.pipeline_fallbacks == 1
+        assert exc._link_free == []  # the fallback drained the pipeline
+        # Pipelining resumes on the next (non-retry) step.
+        rm, cm = exm.step(rm.tokens_dev[:, None], 2, cm)
+        rc, cc = exc.step(rc.tokens_dev[:, None], 2, cc)
+        np.testing.assert_array_equal(rm.tokens, rc.tokens)
+        assert exc.pipeline_fallbacks == 1
+
+    def test_pipelined_steady_state_beats_serial_sum(self, deep_model):
+        """Transfer-dominated K=3: serial pays compute + sum of hops per
+        step, pipelined pays ~max(compute, bottleneck hop)."""
+        cfg0, params = deep_model
+        cfg = dataclasses.replace(cfg0, exit_threshold=0.0)  # all ship
+        batch = 4
+        per_seq = cfg.d_model * 2.0
+        uplinks = tuple(
+            per_seq * batch * 8.0 / s for s in (0.04, 0.025)
+        )
+        times = {}
+        for overlap in ("serial", "pipelined"):
+            ex = TierExecutor(
+                cfg, params,
+                segments_for_cuts(cfg, (2, 3), uplinks=uplinks),
+                compaction="off", simulate_network=True, overlap=overlap,
+            )
+            caches = M.init_caches(cfg, batch, 64)
+            tok = _toks(cfg, batch)
+            res, caches = ex.step(tok, 0, caches)  # warm the jit
+            ex.drain()
+            t0 = time.perf_counter()
+            for i in range(1, 5):
+                res, caches = ex.step(res.tokens_dev[:, None], i, caches)
+            ex.drain()
+            times[overlap] = (time.perf_counter() - t0) / 4
+            assert res.sim_transfer_s == (
+                pytest.approx(0.04), pytest.approx(0.025)
+            )
+        # Serial sleeps 65 ms/step; pipelined ~40 ms (bottleneck hop) plus
+        # a one-step pipeline-fill tail amortized over 4 steps.  Their
+        # computes are identical, so a 10 ms margin is comfortable.
+        assert times["pipelined"] < times["serial"] - 0.010
 
 
 class TestServerPlumbing:

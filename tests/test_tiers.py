@@ -1,9 +1,13 @@
 """Unified K-tier runtime (serving/tiers.py): segment planning rules,
 tier-count equivalences (K=1 engine vs monolithic decode, K=2 MultiTier vs
 PartitionedServer), single-host-sync invariant, per-hop byte accounting,
-and the repartition controller's no-re-jit hot swap."""
+the repartition controller's no-re-jit hot swap, the pipelined overlap
+mode (bitwise equivalence + bottleneck cost model + plan flip), and the
+latency-estimator regressions (per-branch conditional probs, zero-uplink
+transfer guard, degenerate-profile solver diagnostic)."""
 
 import dataclasses
+import types
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +23,7 @@ from repro.core import (
     build_cost_profile,
     shortest_path_plan,
 )
+from repro.core.latency import expected_time
 from repro.core.multitier import TierSpec, expected_time_multitier, solve_multitier
 from repro.models import model as M
 from repro.serving import (
@@ -26,6 +31,7 @@ from repro.serving import (
     PartitionedServer,
     RepartitionController,
     ServingEngine,
+    TierExecutor,
     segments_for_cuts,
 )
 
@@ -146,6 +152,103 @@ class TestSolverEquivalence:
             assert expected_time_multitier(
                 t_c, alpha, p, tiers, plan.cut_after
             ) == pytest.approx(plan.expected_time_s, rel=1e-9, abs=1e-12)
+
+
+class TestOverlapCostModel:
+    """expected_time_multitier(overlap=True): the pipelined steady-state
+    step cost is the bottleneck stage, not the serial sum."""
+
+    def test_overlap_is_bottleneck_stage(self):
+        t_c = np.array([0.0, 0.01, 0.01, 0.01, 0.01])
+        alpha = np.full(5, 1e5)
+        p = np.zeros(5)
+        tiers = [TierSpec("edge", 3.0, 2e6), TierSpec("cloud", 1.0)]
+        s = 2
+        edge = 3.0 * 0.02  # 2 layers at gamma 3
+        xfer = 1e5 * 8.0 / 2e6
+        cloud = 0.02
+        serial = expected_time_multitier(t_c, alpha, p, tiers, (s,))
+        ovl = expected_time_multitier(t_c, alpha, p, tiers, (s,),
+                                      overlap=True)
+        assert serial == pytest.approx(edge + xfer + cloud)
+        assert ovl == pytest.approx(max(edge, xfer, cloud))
+
+    def test_overlap_never_exceeds_serial(self):
+        """max of non-negative stages <= their sum, for every cut vector,
+        branch regime, and bucketed/ideal weighting."""
+        rng = np.random.default_rng(13)
+        tiers = [TierSpec("d", 200.0, 1e6), TierSpec("e", 20.0, 2e7),
+                 TierSpec("c", 1.0)]
+        for _ in range(30):
+            n = int(rng.integers(2, 9))
+            t_c, alpha, p = _random_chain(rng, n)
+            for batch in (None, 8):
+                for s1 in range(n + 1):
+                    for s2 in range(s1, n + 1):
+                        ser = expected_time_multitier(
+                            t_c, alpha, p, tiers, (s1, s2), batch=batch
+                        )
+                        ovl = expected_time_multitier(
+                            t_c, alpha, p, tiers, (s1, s2), batch=batch,
+                            overlap=True,
+                        )
+                        assert ovl <= ser + 1e-12
+
+    def test_overlap_solver_matches_enumeration(self):
+        rng = np.random.default_rng(17)
+        tiers = [TierSpec("d", 100.0, 1e6), TierSpec("e", 10.0, 1e7),
+                 TierSpec("c", 1.0)]
+        for _ in range(25):
+            n = int(rng.integers(2, 9))
+            t_c, alpha, p = _random_chain(rng, n)
+            plan = solve_multitier(t_c, alpha, p, tiers, overlap=True)
+            best = min(
+                expected_time_multitier(t_c, alpha, p, tiers, (s1, s2),
+                                        overlap=True)
+                for s1 in range(n + 1) for s2 in range(s1, n + 1)
+            )
+            assert plan.expected_time_s == pytest.approx(
+                best, rel=1e-9, abs=1e-12
+            )
+            assert expected_time_multitier(
+                t_c, alpha, p, tiers, plan.cut_after, overlap=True
+            ) == pytest.approx(plan.expected_time_s, rel=1e-9, abs=1e-12)
+
+    def test_optimal_cut_moves_under_overlap(self):
+        """The benchmark's plan-flip profile: transfers shrink with depth,
+        so serial hides on the edge while overlap cuts early (a transfer
+        below the bottleneck stage is free when pipelined)."""
+        t_c = np.array([0.0, 0.01, 0.01, 0.01, 0.01])
+        alpha = np.array([80e3, 40e3, 20e3, 10e3, 5e3])
+        p = np.zeros(5)
+        tiers = [TierSpec("edge", 2.0, 4e6), TierSpec("cloud", 1.0)]
+        plan_s = solve_multitier(t_c, alpha, p, tiers)
+        plan_o = solve_multitier(t_c, alpha, p, tiers, overlap=True)
+        assert plan_s.cut_after == (4,)  # serial: ship nothing
+        assert plan_o.cut_after == (2,)  # overlap: balance the stages
+        assert plan_o.expected_time_s < plan_s.expected_time_s
+
+    def test_degenerate_profile_raises_value_error(self):
+        """An infeasible profile (unusable entry tier + zero uplink) gets a
+        clear diagnostic instead of the historical UnboundLocalError."""
+        t_c = np.array([0.0, 1.0])
+        alpha = np.array([10.0, 10.0])
+        p = np.zeros(2)
+        tiers = [TierSpec("dev", np.inf, 0.0), TierSpec("cloud", 1.0)]
+        with pytest.raises(ValueError, match="unreachable"):
+            solve_multitier(t_c, alpha, p, tiers)
+
+    def test_zero_uplink_with_feasible_edge_plan_solves(self):
+        """A zero/unset uplink must not crash the solver when finishing on
+        the reachable tiers is feasible (it simply prices the hop inf)."""
+        t_c = np.array([0.0, 1.0, 1.0])
+        alpha = np.array([10.0, 10.0, 10.0])
+        plan = solve_multitier(
+            t_c, alpha, np.zeros(3),
+            [TierSpec("edge", 2.0, 0.0), TierSpec("cloud", 1.0)],
+        )
+        assert plan.cut_after == (2,)  # everything on the edge
+        assert np.isfinite(plan.expected_time_s)
 
 
 class TestTierEquivalence:
@@ -295,6 +398,120 @@ class TestByteAccounting:
         assert rep.shipped_per_hop == () and rep.bytes_per_hop == ()
 
 
+class TestPipelinedRuntime:
+    """overlap="pipelined" is a wall-clock re-ordering of the simulated
+    transfers only: tokens, exit masks, and per-hop byte accounting are
+    bitwise identical to serial mode, and the one-fetch-per-emitted-token
+    contract holds."""
+
+    def _run(self, cfg, params, cuts, overlap, steps=3):
+        # Fast uplinks: the simulated sleeps are microseconds, so the test
+        # exercises the pipelined bookkeeping without slowing the suite.
+        segs = segments_for_cuts(cfg, cuts, uplinks=(1e9,) * len(cuts))
+        ex = TierExecutor(
+            cfg, params, segs, compaction="off",
+            simulate_network=True, overlap=overlap,
+        )
+        caches = M.init_caches(cfg, 4, 64)
+        tok = _toks(cfg)
+        out = []
+        for i in range(steps):
+            res, caches = ex.step(tok, i, caches)
+            out.append(res)
+            tok = res.tokens_dev[:, None]
+        ex.drain()
+        return ex, out
+
+    @pytest.mark.parametrize("cuts", [(), (2,), (2, 3)])
+    def test_bitwise_equivalent_to_serial(self, deep_model, cuts):
+        cfg, params = deep_model
+        exs, outs_s = self._run(cfg, params, cuts, "serial")
+        exp, outs_p = self._run(cfg, params, cuts, "pipelined")
+        for a, b in zip(outs_s, outs_p):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            np.testing.assert_array_equal(a.exited, b.exited)
+            np.testing.assert_array_equal(a.exit_tier, b.exit_tier)
+            assert a.shipped_per_hop == b.shipped_per_hop
+            assert a.bytes_per_hop == b.bytes_per_hop
+            assert a.sim_transfer_s == b.sim_transfer_s
+            for layer in a.branch_take:
+                np.testing.assert_array_equal(
+                    a.branch_take[layer], b.branch_take[layer]
+                )
+        # One fetch per emitted token on both paths.
+        assert exs.host_syncs == exp.host_syncs == 3
+        assert exp.pipeline_fallbacks == 0
+
+    def test_drain_is_idempotent_and_resets(self, deep_model):
+        cfg, params = deep_model
+        ex, _ = self._run(cfg, params, (2,), "pipelined")
+        assert ex._link_free == [] and ex._inflight_done == 0.0
+        ex.drain()  # no-op when nothing is in flight
+        assert ex._link_free == []
+
+    def test_rejects_unknown_overlap_mode(self, deep_model):
+        cfg, params = deep_model
+        with pytest.raises(ValueError, match="overlap"):
+            TierExecutor(
+                cfg, params, segments_for_cuts(cfg, (2,)), overlap="async"
+            )
+
+
+class TestEstimatorRegressions:
+    def test_partitioned_estimate_uses_conditional_probs(self, deep_model):
+        """PartitionedServer._estimate historically substituted the
+        *cumulative* measured exit fraction for every branch's conditional
+        exit_prob, overestimating exits whenever two or more branches are
+        evaluated.  With branch 1 exiting 4/8 and branch 3 exiting 2 of
+        the 4 survivors, the conditionals are (0.5, 0.5) — not the 0.75
+        cumulative fraction the old code installed at both branches."""
+        cfg, params = deep_model
+        costs = [LayerCost(f"l{i}", 0, 0, cfg.d_model * 2.0, 1e-3)
+                 for i in range(cfg.num_layers)]
+        profile = build_cost_profile(
+            costs, cfg.branch_layers, np.array([0.3, 0.4]), "3g", 50.0, 64.0
+        )
+        srv = PartitionedServer(
+            cfg, params, 4, cost_profile=profile, compaction="off"
+        )
+        take1 = np.zeros(8, bool)
+        take1[:4] = True
+        take3 = np.zeros(8, bool)
+        take3[4:6] = True  # 2 of the 4 still alive after branch 1
+        res = types.SimpleNamespace(
+            tokens=np.zeros(8, np.int64), branch_take={1: take1, 3: take3}
+        )
+        est = srv._estimate(4, res)
+
+        def at_probs(p1, p3):
+            branches = tuple(
+                dataclasses.replace(b, exit_prob={1: p1, 3: p3}[b.after_layer])
+                for b in profile.branches
+            )
+            return expected_time(
+                dataclasses.replace(profile, branches=branches), 4
+            )
+
+        assert est == pytest.approx(at_probs(0.5, 0.5))
+        old_wrong = at_probs(0.75, 0.75)
+        assert est != pytest.approx(old_wrong)
+        # Inflated exits shed downstream compute -> the old estimate was
+        # optimistic (too low).
+        assert old_wrong < est
+
+    def test_multitier_unset_uplink_reports_zero_transfer(self, deep_model):
+        """TierSpec.uplink_bps defaults to 0.0: a plan whose hop bandwidth
+        was never set must report 0.0 transfer time, not ZeroDivisionError
+        (mirrors the executor's sim_transfer_s guard)."""
+        cfg, params = deep_model
+        srv = MultiTierServer(
+            cfg, params, [TierSpec("e", 25.0), TierSpec("c", 1.0)], (2,)
+        )
+        rep, _ = srv.step(_toks(cfg), 0, M.init_caches(cfg, 4, 32))
+        assert rep.transfer_s_per_hop == (0.0,)
+        assert rep.tokens.shape == (4,)
+
+
 class TestRepartition:
     def test_swap_reuses_unchanged_segments(self, deep_model):
         cfg, params = deep_model
@@ -333,6 +550,78 @@ class TestRepartition:
         assert srv.split_layer == cuts[0]
         rep, _ = srv.step(_toks(cfg), 0, M.init_caches(cfg, 4, 32))
         assert rep.tokens.shape == (4,)
+
+    def test_controller_solves_overlap_for_pipelined_server(self, deep_model):
+        """A pipelined server is re-solved against the bottleneck-stage
+        cost: the controller's installed cut must minimize the overlap
+        objective (which can differ from the serial Dijkstra cut)."""
+        cfg, params = deep_model
+        costs = [LayerCost(f"l{i}", 0, 0, cfg.d_model * 2.0, 1e-3)
+                 for i in range(cfg.num_layers)]
+        p_k = np.array([0.1, 0.1])
+        profile = build_cost_profile(
+            costs, cfg.branch_layers, p_k, "3g", 50.0, 64.0
+        )
+        srv = PartitionedServer(
+            cfg, params, 0, cost_profile=profile,
+            network=NetworkProfile("3g", 1.1e6), overlap="pipelined",
+        )
+        ctl = RepartitionController(srv, profile)
+        (cut,) = ctl.solve(p_k)
+        prof = dataclasses.replace(
+            profile,
+            branches=tuple(
+                dataclasses.replace(b, exit_prob=float(p))
+                for b, p in zip(profile.branches, p_k)
+            ),
+        )
+        tiers = [TierSpec("edge", prof.gamma, prof.network.bandwidth_bps),
+                 TierSpec("cloud", 1.0)]
+        best = min(
+            range(cfg.num_layers + 1),
+            key=lambda s: expected_time_multitier(
+                prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers, (s,),
+                overlap=True,
+            ),
+        )
+        assert cut == best
+        ctl._install(p_k)
+        assert srv.split_layer == cut
+
+    def test_controller_bucketed_2tier_solves_lattice_objective(self, deep_model):
+        """With batch set and a compacting 2-tier server, solve() optimizes
+        the same padding-honest bucketed lattice cost the server's
+        est_latency_s reports — not the ideal Dijkstra sum."""
+        cfg, params = deep_model
+        costs = [LayerCost(f"l{i}", 0, 0, cfg.d_model * 2.0, 1e-3)
+                 for i in range(cfg.num_layers)]
+        p_k = np.array([0.6, 0.2])
+        profile = build_cost_profile(
+            costs, cfg.branch_layers, p_k, "3g", 50.0, 64.0
+        )
+        srv = PartitionedServer(
+            cfg, params, 0, cost_profile=profile,
+            network=NetworkProfile("3g", 1.1e6), compaction="bucketed",
+        )
+        ctl = RepartitionController(srv, profile, batch=8)
+        (cut,) = ctl.solve(p_k)
+        prof = dataclasses.replace(
+            profile,
+            branches=tuple(
+                dataclasses.replace(b, exit_prob=float(p))
+                for b, p in zip(profile.branches, p_k)
+            ),
+        )
+        tiers = [TierSpec("edge", prof.gamma, prof.network.bandwidth_bps),
+                 TierSpec("cloud", 1.0)]
+        best = min(
+            range(cfg.num_layers + 1),
+            key=lambda s: expected_time_multitier(
+                prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers, (s,),
+                batch=8,
+            ),
+        )
+        assert cut == best
 
     def test_controller_multitier(self, deep_model):
         cfg, params = deep_model

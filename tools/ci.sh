@@ -2,8 +2,10 @@
 # Tier-1 CI entry: run the test suite exactly as ROADMAP.md specifies
 # (tests/test_compaction.py and the runtime/controller suites are part of
 # the default collection), then smoke-run the serving benchmark sweep in
-# fast mode so the masked-vs-compacted FLOPs assertion and the 1-sync
-# invariant are exercised end to end on every CI pass.
+# fast mode so the masked-vs-compacted FLOPs assertion, the 1-sync
+# invariant, and the serial-vs-pipelined overlap cell (pipelined
+# steady-state step time <= serial under simulate_network=True, plus the
+# overlap plan flip) are exercised end to end on every CI pass.
 # Usage: tools/ci.sh [extra pytest args]
 #   REPRO_CI_BENCH=0 skips the benchmark smoke (pytest only).
 set -e
