@@ -1,6 +1,6 @@
 PY := python
 
-.PHONY: test test-fast bench-serving bench-serving-fast bench-overlap example
+.PHONY: test test-fast bench-serving bench-serving-fast bench-overlap bench-kernels bench-kernels-full example
 
 # Tier-1 verify (ROADMAP): the full suite with the src layout on the path.
 test:
@@ -20,6 +20,16 @@ bench-serving-fast:
 # step time <= serial under simulate_network=True and the plan flip.
 bench-overlap:
 	REPRO_BENCH_FAST=1 REPRO_BENCH_ONLY=overlap PYTHONPATH=src $(PY) benchmarks/serving_step.py
+
+# Kernel-vs-jnp decode hot path sweep (flash_decode / fused exit decision /
+# ssd_update / end-to-end TierExecutor step) in CI smoke mode: tiny shapes,
+# kernels in interpret mode off-TPU, trajectory + 1-sync asserts inline.
+bench-kernels:
+	REPRO_BENCH_FAST=1 PYTHONPATH=src $(PY) benchmarks/kernel_micro.py
+
+# Full sweep incl. the serving-scale jnp reference timings.
+bench-kernels-full:
+	PYTHONPATH=src $(PY) benchmarks/kernel_micro.py
 
 example:
 	PYTHONPATH=src $(PY) examples/serve_partitioned.py

@@ -83,6 +83,13 @@ class ModelConfig:
     branch_layers: tuple[int, ...] = ()  # 1-based trunk indices carrying exits
     branch_loss_weight: float = 0.3  # joint-training weight per branch
     exit_threshold: float = 0.5  # normalized-entropy exit threshold
+    # --- serving --------------------------------------------------------------
+    # Decode hot path: dispatch to the Pallas kernel suite (flash_decode
+    # survivor-row attention, fused entropy-exit+argmax, ssd_update)?
+    # None = auto: kernels on TPU, pure jnp elsewhere (an explicit True
+    # off-TPU runs the kernels in interpret mode — tests/benchmarks).
+    # Serving constructors (TierExecutor / engine / servers) can override.
+    use_kernels: bool | None = None
     # --- numerics / training ---------------------------------------------------
     dtype: str = "bfloat16"
     param_dtype: str = "float32"  # bfloat16 for the >100B configs (16 GB/chip)

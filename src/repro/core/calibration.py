@@ -29,11 +29,20 @@ __all__ = [
 
 
 def normalized_entropy(logits: jax.Array, axis: int = -1) -> jax.Array:
-    """H(softmax(logits)) / log(C) in [0, 1]; numerically stable."""
-    logp = jax.nn.log_softmax(logits, axis=axis)
+    """H(softmax(logits)) / log(C) in [0, 1]; numerically stable.
+
+    Math runs in fp32 regardless of the logits dtype: the serving exit
+    threshold compares this value, and the fused Pallas exit kernel
+    (kernels/entropy_exit.py) accumulates in fp32 — a bf16 softmax here
+    would make the two paths disagree at the threshold knife edge.  The
+    log base is the logits *width* C (pad lanes included), matching the
+    kernel and ``kernels.ref.entropy_exit_ref``.
+    """
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=axis)
     h = -jnp.sum(jnp.exp(logp) * logp, axis=axis)
     c = logits.shape[axis]
-    return h / jnp.log(c)
+    return h / jnp.log(c).astype(jnp.float32)
 
 
 def exit_mask(logits: jax.Array, threshold: float) -> jax.Array:

@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""repro.kernels — Pallas TPU kernel suite for the decode hot path.
+
+    flash_decode.py   single-token GQA decode attention; scalar-prefetch
+                      survivor row map into the resident KV cache
+    entropy_exit.py   streaming softmax-entropy exit test; fused
+                      entropy + flag + argmax-token variant
+    ssd_scan.py       Mamba2 chunked SSD scan + single-step ssd_update
+                      (same survivor row map into the resident state)
+    ref.py            pure-jnp oracles (the allclose references)
+    ops.py            jit'd dispatch wrappers + `use_kernels` resolution
+
+Serving reaches these through ``ops`` behind the ``use_kernels`` knob
+(auto: on TPU); off-TPU the kernels run in interpret mode for the
+equivalence tests and `make bench-kernels`.
+"""

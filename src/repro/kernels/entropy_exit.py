@@ -1,19 +1,32 @@
-"""Fused softmax-entropy + exit-decision Pallas TPU kernel.
+"""Fused softmax-entropy + exit-decision Pallas TPU kernels.
 
 The BranchyNet confidence test (paper Sec. III) runs at every side branch
 for every decoded token: H(softmax(logits)) / log V < threshold.  At Qwen3's
 151 936-token vocab the naive lowering materializes log_softmax (B, V) in
-fp32 — 3 HBM round trips.  This kernel streams the vocab once through VMEM
-with an online (max, sum-exp, sum-l*exp) accumulator and emits only (B,)
+fp32 — 3 HBM round trips.  These kernels stream the vocab once through VMEM
+with an online (max, sum-exp, sum-l*exp) accumulator and emit only (B,)
 entropy + exit flags:
 
     H = lse - (sum_i l_i e^{l_i - m}) / (sum_i e^{l_i - m}),  lse = m + log s
 
+Normalization contract: H is divided by log(V) with V the *width of the
+logits array* — exactly what the serving exit threshold compares against
+(``core.calibration.normalized_entropy`` divides by ``log(logits.shape[-1])``
+too, so padded-vocab configs, whose pad lanes carry -1e30 and contribute 0
+to every accumulator, agree between the inline jnp path and the kernel).
+
+``entropy_exit_argmax_pallas`` additionally carries an online (best value,
+best index) pair so the branch's exit *token* comes out of the same single
+pass — the serving fast path never materializes a separate softmax or
+argmax over (B, V).  Tie-breaking matches ``jnp.argmax`` (first occurrence:
+strictly-greater updates across tiles, first-index argmax within a tile),
+so the emitted token is bitwise identical to the jnp path.
+
 Grid: (B_tiles, V_tiles); the V dim is the sequential inner loop, carrying
-the three accumulators in VMEM scratch, finalizing on the last tile.
-BlockSpec tiles are (block_b, block_v) with block_v a multiple of 128 (lane
-width) and block_b a multiple of 8 (sublane) — MXU is not involved; this is
-a VPU reduction kernel.
+the accumulators in VMEM scratch, finalizing on the last tile.  BlockSpec
+tiles are (block_b, block_v) with block_v a multiple of 128 (lane width)
+and block_b a multiple of 8 (sublane) — MXU is not involved; these are VPU
+reduction kernels.
 """
 
 from __future__ import annotations
@@ -26,7 +39,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["entropy_exit_pallas"]
+__all__ = ["entropy_exit_pallas", "entropy_exit_argmax_pallas"]
 
 NEG_INF = -1e30
 
@@ -114,3 +127,110 @@ def entropy_exit_pallas(
         interpret=interpret,
     )(logits, thresh)
     return h[:b], ex[:b]
+
+
+def _kernel_argmax(
+    logits_ref,  # (block_b, block_v) VMEM
+    thresh_ref,  # (1, 1) SMEM
+    h_ref,  # (block_b,) out
+    exit_ref,  # (block_b,) out
+    idx_ref,  # (block_b,) int32 out
+    m_scr,  # (block_b,) VMEM scratch: running max
+    s_scr,  # (block_b,) running sum exp
+    u_scr,  # (block_b,) running sum l * exp
+    bv_scr,  # (block_b,) running best value
+    bi_scr,  # (block_b,) int32 running best index
+    *,
+    num_v_blocks: int,
+    block_v: int,
+    vocab: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        u_scr[...] = jnp.zeros_like(u_scr)
+        bv_scr[...] = jnp.full_like(bv_scr, NEG_INF)
+        bi_scr[...] = jnp.zeros_like(bi_scr)
+
+    l = logits_ref[...].astype(jnp.float32)  # (bb, bv)
+    m_old = m_scr[...]
+    m_new = jnp.maximum(m_old, l.max(axis=-1))
+    corr = jnp.exp(m_old - m_new)
+    e = jnp.exp(l - m_new[:, None])
+    s_scr[...] = s_scr[...] * corr + e.sum(axis=-1)
+    u_scr[...] = u_scr[...] * corr + (l * e).sum(axis=-1)
+    m_scr[...] = m_new
+
+    # Online argmax: first occurrence within the tile (jnp.argmax), and a
+    # strictly-greater update across tiles, reproduce jnp.argmax over the
+    # full row exactly (comparisons are exact; no float error involved).
+    loc_v = l.max(axis=-1)
+    loc_i = jnp.argmax(l, axis=-1).astype(jnp.int32) + j * block_v
+    upd = loc_v > bv_scr[...]
+    bv_scr[...] = jnp.where(upd, loc_v, bv_scr[...])
+    bi_scr[...] = jnp.where(upd, loc_i, bi_scr[...])
+
+    @pl.when(j == num_v_blocks - 1)
+    def _finalize():
+        s = s_scr[...]
+        lse = m_scr[...] + jnp.log(s)
+        h = (lse - u_scr[...] / s) / np.log(vocab)
+        h_ref[...] = h
+        exit_ref[...] = h < thresh_ref[0, 0]
+        idx_ref[...] = bi_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
+def entropy_exit_argmax_pallas(
+    logits: jax.Array,  # (B, V)
+    threshold: jax.Array | float,
+    *,
+    block_b: int = 8,
+    block_v: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused exit decision: one pass over (B, V) logits returns
+    (normalized entropy (B,), exit flags (B,) bool, argmax token (B,) int32).
+    """
+    b, v = logits.shape
+    vocab = v
+    pb = (-b) % block_b
+    pv = (-v) % block_v
+    if pb or pv:
+        logits = jnp.pad(logits, ((0, pb), (0, pv)), constant_values=NEG_INF)
+    bb, vv = logits.shape
+    grid = (bb // block_b, vv // block_v)
+
+    thresh = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    h, ex, idx = pl.pallas_call(
+        functools.partial(
+            _kernel_argmax, num_v_blocks=grid[1], block_v=block_v, vocab=vocab
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bb,), jnp.float32),
+            jax.ShapeDtypeStruct((bb,), jnp.bool_),
+            jax.ShapeDtypeStruct((bb,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits, thresh)
+    return h[:b], ex[:b], idx[:b]

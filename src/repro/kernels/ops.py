@@ -1,10 +1,35 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels — the decode hot path's
+kernel dispatch layer.
 
-On a real TPU these dispatch to the compiled kernels; on CPU (this
-container) they run in interpret mode, which executes the kernel body in
-Python — correct but slow, so the model code uses the pure-jnp paths by
-default and these wrappers are exercised by tests/benchmarks and are the
-drop-in used on hardware (``use_kernels=True`` plumbing).
+These are what the model/serving code calls when ``use_kernels`` is on:
+
+  * :func:`flash_decode` — single-token GQA decode attention streaming
+    survivor rows straight out of the full-batch resident KV cache via a
+    scalar-prefetched row map (``models.attention.attn_apply`` decode);
+  * :func:`entropy_exit_argmax` — the fused BranchyNet exit decision:
+    normalized entropy, threshold flag and argmax token in ONE pass over
+    the (B, V) branch logits (``serving.tiers.TierExecutor`` per-branch
+    exit masking);
+  * :func:`entropy_exit` — the entropy + flag pair without the token
+    (calibration sweeps);
+  * :func:`ssd_update` — one recurrent Mamba2/SSD decode step against the
+    resident state, same ``rows`` plumbing (``models.mamba.mamba_apply``
+    decode);
+  * :func:`ssd_scan` — the chunked SSD prefill/train scan.
+
+``use_kernels`` resolution (:func:`resolve_use_kernels`): ``None`` means
+auto — kernels on TPU, pure-jnp elsewhere.  An explicit ``True`` off-TPU
+runs the kernels in *interpret mode* (the kernel body executes as jax ops
+on CPU): bit-for-bit the same dataflow the TPU lowering compiles, correct
+but slow, which is exactly what the equivalence tests and the
+``benchmarks/kernel_micro.py`` sweep exercise.  Each wrapper picks
+interpret mode automatically from the backend; pass ``interpret=``
+explicitly to override.
+
+All wrappers are shape-polymorphic the cheap way: they are ``jax.jit``-ed
+(and re-traced inside the tier runtime's per-(spec, bucket) segment
+cache), so a new *bucket* shape compiles once and a survivor-count change
+within a bucket never recompiles — the same contract as the jnp path.
 """
 
 from __future__ import annotations
@@ -14,15 +39,33 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.entropy_exit import entropy_exit_pallas
+from repro.kernels.entropy_exit import (
+    entropy_exit_argmax_pallas,
+    entropy_exit_pallas,
+)
 from repro.kernels.flash_decode import flash_decode_pallas
-from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas, ssd_update_pallas
 
-__all__ = ["entropy_exit", "flash_decode", "ssd_scan", "on_tpu"]
+__all__ = [
+    "entropy_exit",
+    "entropy_exit_argmax",
+    "flash_decode",
+    "ssd_scan",
+    "ssd_update",
+    "on_tpu",
+    "resolve_use_kernels",
+]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_use_kernels(flag: bool | None) -> bool:
+    """The ``use_kernels`` tri-state: None = auto (kernels on TPU only),
+    True/False force the kernel / pure-jnp path (True off-TPU runs the
+    kernels in interpret mode)."""
+    return on_tpu() if flag is None else bool(flag)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -30,6 +73,14 @@ def entropy_exit(logits, threshold, *, interpret: bool | None = None):
     """(B, V) logits -> (normalized entropy (B,), exit flags (B,))."""
     interp = (not on_tpu()) if interpret is None else interpret
     return entropy_exit_pallas(logits, threshold, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def entropy_exit_argmax(logits, threshold, *, interpret: bool | None = None):
+    """Fused exit decision: (B, V) logits -> (normalized entropy (B,),
+    exit flags (B,), argmax token (B,) int32) in one streaming pass."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return entropy_exit_argmax_pallas(logits, threshold, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
@@ -48,3 +99,14 @@ def ssd_scan(x, a, b_mat, c_mat, *, chunk: int = 128,
     """Mamba2 chunked SSD scan: (y, final_state)."""
     interp = (not on_tpu()) if interpret is None else interpret
     return ssd_scan_pallas(x, a, b_mat, c_mat, chunk=chunk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_update(h_state, x, a, b_vec, c_vec, rows=None, *,
+               interpret: bool | None = None):
+    """One recurrent SSD decode step against the full-batch resident state;
+    ``rows`` maps the sub-batch onto state rows (scalar-prefetch, no gather
+    copy).  Returns (y (B,H,P), new state rows (B,H,P,N)), fp32."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return ssd_update_pallas(h_state, x, a, b_vec, c_vec, rows,
+                             interpret=interp)

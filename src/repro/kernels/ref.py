@@ -10,7 +10,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["entropy_exit_ref", "flash_decode_ref", "ssd_scan_ref"]
+__all__ = [
+    "entropy_exit_ref",
+    "entropy_exit_argmax_ref",
+    "flash_decode_ref",
+    "ssd_scan_ref",
+    "ssd_update_ref",
+]
 
 
 def entropy_exit_ref(
@@ -18,12 +24,26 @@ def entropy_exit_ref(
 ) -> tuple[jax.Array, jax.Array]:
     """Normalized softmax entropy over the last axis + exit decision.
 
-    Returns (entropy (B,), exit (B,) bool).  fp32 math.
+    Returns (entropy (B,), exit (B,) bool).  fp32 math, H normalized by
+    log of the logits *width* (pad lanes included) — the same base the
+    serving exit threshold uses (core.calibration.normalized_entropy).
     """
     lf = logits.astype(jnp.float32)
     logp = jax.nn.log_softmax(lf, axis=-1)
     h = -jnp.sum(jnp.exp(logp) * logp, axis=-1) / np.log(lf.shape[-1])
     return h, h < threshold
+
+
+def entropy_exit_argmax_ref(
+    logits: jax.Array, threshold: float
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused exit decision: (entropy (B,), exit (B,) bool, argmax (B,) i32).
+
+    The argmax is jnp.argmax over the raw logits (first occurrence on
+    ties) — exactly the token the serving jnp path emits at a branch exit.
+    """
+    h, ex = entropy_exit_ref(logits, threshold)
+    return h, ex, jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
 def flash_decode_ref(
@@ -88,3 +108,28 @@ def ssd_scan_ref(
     )
     hlast, ys = jax.lax.scan(step, hinit, jnp.arange(l))
     return ys.transpose(1, 0, 2, 3).astype(x.dtype), hlast
+
+
+def ssd_update_ref(
+    h_state: jax.Array,  # (Bc, H, P, N) full-batch resident state
+    x: jax.Array,  # (B, H, P)  dt-scaled input
+    a: jax.Array,  # (B, H)     dt * A (negative)
+    b_vec: jax.Array,  # (B, G, N)
+    c_vec: jax.Array,  # (B, G, N)
+    rows: jax.Array | None = None,  # (B,) int32 sub-batch row -> state row
+) -> tuple[jax.Array, jax.Array]:
+    """One recurrent SSD decode step: h' = e^a h + x (x) B ; y = h' . C,
+    with an optional survivor row map into a larger resident state.
+    Returns (y (B,H,P) fp32, new state rows (B,H,P,N) fp32), sub-batch
+    order (the caller scatters the rows back)."""
+    h = h_state if rows is None else h_state[rows]
+    bsz, nh, p, n = h.shape
+    g = b_vec.shape[1]
+    rep = nh // g
+    bh = jnp.repeat(b_vec, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    ch = jnp.repeat(c_vec, rep, axis=1).astype(jnp.float32)
+    h_new = h.astype(jnp.float32) * jnp.exp(a.astype(jnp.float32))[
+        ..., None, None
+    ] + jnp.einsum("bhp,bhn->bhpn", x.astype(jnp.float32), bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, ch)
+    return y, h_new

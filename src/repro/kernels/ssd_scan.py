@@ -13,6 +13,13 @@ Grid: (B, H, n_chunks), chunk dim sequential (carries h in scratch).
 Block tiles: x (1, chunk, 1, P), B/C (1, chunk, 1, N) — P, N are multiples
 of the 128 lane width for the assigned configs (P=64 pads to 128 via the
 wrapper when needed).
+
+``ssd_update_pallas`` is the decode-time sibling: one recurrent step
+``h' = e^a h + x (x) B ; y = h' . C`` per (batch, head).  Like the
+flash_decode kernel it takes a scalar-prefetched survivor row map so a
+compacted sub-batch reads its rows of the full-batch resident SSM state
+copy-free; the updated rows come back dense and the model scatters them in
+place (``.at[rows].set(mode="drop")``).
 """
 
 from __future__ import annotations
@@ -25,7 +32,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["ssd_scan_pallas"]
+__all__ = ["ssd_scan_pallas", "ssd_update_pallas"]
 
 
 def _kernel(
@@ -131,3 +138,77 @@ def ssd_scan_pallas(
         interpret=interpret,
     )(x, a, b_mat, c_mat)
     return y[:, :l], h_final
+
+
+def _update_kernel(
+    rows_ref,  # (B,) SMEM scalar-prefetch: sub-batch row -> state row
+    h_ref,  # (1, 1, P, N)   resident state row
+    x_ref,  # (1, 1, P)
+    a_ref,  # (1, 1)
+    b_ref,  # (1, 1, N)
+    c_ref,  # (1, 1, N)
+    y_ref,  # (1, 1, P) out
+    hout_ref,  # (1, 1, P, N) out (updated state row, dense order)
+):
+    h_prev = h_ref[0, 0].astype(jnp.float32)  # (P, N)
+    x = x_ref[0, 0].astype(jnp.float32)  # (P,)
+    a = a_ref[0, 0].astype(jnp.float32)  # ()
+    bv = b_ref[0, 0].astype(jnp.float32)  # (N,)
+    cv = c_ref[0, 0].astype(jnp.float32)  # (N,)
+
+    h_new = h_prev * jnp.exp(a) + x[:, None] * bv[None, :]  # (P, N)
+    y = jnp.sum(h_new * cv[None, :], axis=-1)  # (P,)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_update_pallas(
+    h_state: jax.Array,  # (Bc, H, P, N) full-batch resident SSM state
+    x: jax.Array,  # (B, H, P)  dt-scaled input, B <= Bc
+    a: jax.Array,  # (B, H)     dt * A (negative)
+    b_vec: jax.Array,  # (B, G, N)
+    c_vec: jax.Array,  # (B, G, N)
+    rows: jax.Array | None = None,  # (B,) int32 sub-batch row -> state row
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One recurrent SSD decode step against the resident state.
+
+    Returns (y (B, H, P) fp32, new state rows (B, H, P, N) fp32) in the
+    *sub-batch* order — the caller scatters the state rows back.  ``rows``
+    is a scalar-prefetch operand: the block index maps DMA only the
+    survivor rows of the full state, no gather copy.
+    """
+    b, h, p = x.shape
+    g, n = b_vec.shape[1], b_vec.shape[2]
+    rep = h // g  # heads per B/C group
+    if rows is None:
+        rows = jnp.arange(b, dtype=jnp.int32)
+    rows = rows.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, p, n), lambda i, j, rows_: (rows_[i], j, 0, 0)),
+            pl.BlockSpec((1, 1, p), lambda i, j, rows_: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, rows_: (i, j)),
+            pl.BlockSpec((1, 1, n), lambda i, j, rows_: (i, j // rep, 0)),
+            pl.BlockSpec((1, 1, n), lambda i, j, rows_: (i, j // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, p), lambda i, j, rows_: (i, j, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, rows_: (i, j, 0, 0)),
+        ],
+    )
+    y, h_new = pl.pallas_call(
+        _update_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rows, h_state, x, a, b_vec, c_vec)
+    return y, h_new

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models.layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
 from repro.sharding.ctx import constrain
 
@@ -332,13 +333,22 @@ def attn_apply(
     window: int | None = None,
     kv_override: tuple[jax.Array, jax.Array] | None = None,  # cross-attention
     rows: jax.Array | None = None,  # (Bsub,) survivor rows of the full cache
+    use_kernels: bool = False,  # decode: dispatch to the Pallas flash_decode
 ) -> tuple[jax.Array, Params | None]:
     """One attention op.  cache=None -> full (training/prefill) attention;
     cache given -> single-step decode against the cache.  ``kv_override``
     supplies precomputed encoder K/V for cross-attention (no cache write).
 
     ``rows`` (decode only): x is a compacted survivor sub-batch; row ``i``
-    of x reads/writes row ``rows[i]`` of the full-batch cache."""
+    of x reads/writes row ``rows[i]`` of the full-batch cache.
+
+    ``use_kernels`` (decode only): the single-token attention runs in the
+    Pallas flash_decode kernel, which streams the survivor rows straight
+    out of the full-batch resident cache through a scalar-prefetched row
+    map (zero gather copies) instead of the jnp ``cache[...][rows]``
+    gather + flash_attention.  GQA head grouping, per-sequence ``pos``
+    slot validity and sliding windows all ride through; prefill/train
+    paths ignore the flag."""
     b, s, _ = x.shape
     kh, hd = cfg.num_kv_heads, cfg.head_dim
     g = cfg.num_heads // kh
@@ -374,23 +384,34 @@ def attn_apply(
     elif cache is not None:
         # -------- decode: write this step, attend over the whole cache.
         cache = _cache_write(cache, k, v, rows)
-        if rows is None:
-            ck, cv, cp = cache["k"], cache["v"], cache["pos"]
-        else:
-            # Compacted sub-batch: attend survivor rows only.  On TPU the
-            # Pallas flash_decode kernel streams these rows straight out of
-            # the full cache via a scalar-prefetched row map (no copy); the
-            # jnp path relies on XLA fusing the gather into the attention.
-            ck, cv, cp = cache["k"][rows], cache["v"][rows], cache["pos"][rows]
         if cfg.decode_qhd_shard:
             # Run attention in the cache's head-dim-sharded layout: scores
             # become partial sums (all-reduce) instead of resharding the
             # cache or q every layer (§Perf).
             qg = constrain(qg, "b...v")
-        out = flash_attention(
-            qg, ck, cv, positions, cp,
-            window=window, block_k=min(1024, ck.shape[1]),
-        )
+        if use_kernels:
+            # Pallas flash_decode: the survivor row map is a scalar-prefetch
+            # operand, so the kernel DMAs only rows ``rows`` of the resident
+            # cache — the compacted sub-batch attends in place, no gather.
+            out = kernel_ops.flash_decode(
+                qg.reshape(b, kh * g, hd),
+                cache["k"], cache["v"], cache["pos"], positions[0],
+                rows, window=window,
+            ).reshape(b, 1, kh, g, hd)
+        else:
+            if rows is None:
+                ck, cv, cp = cache["k"], cache["v"], cache["pos"]
+            else:
+                # jnp compacted path: gather the survivor rows and hope XLA
+                # fuses the gather into the attention (the kernel path
+                # above is the copy-free version of this).
+                ck, cv, cp = (
+                    cache["k"][rows], cache["v"][rows], cache["pos"][rows]
+                )
+            out = flash_attention(
+                qg, ck, cv, positions, cp,
+                window=window, block_k=min(1024, ck.shape[1]),
+            )
         new_cache = cache
     elif kv_override is not None:
         # -------- cross-attention: bidirectional over encoder frames.

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models.layers import dense, dense_init, rmsnorm
 
 __all__ = ["mamba_init", "mamba_apply", "init_ssm_state", "ssd_chunked", "ssd_step"]
@@ -177,12 +178,18 @@ def mamba_apply(
     *,
     return_state: bool = False,
     rows: jax.Array | None = None,  # (Bsub,) survivor rows (decode only)
+    use_kernels: bool = False,  # decode: dispatch to the Pallas ssd_update
 ) -> tuple[jax.Array, Params | None]:
     """state=None: chunked scan over the sequence (train/prefill).
     state given: S must be 1 (decode) — O(1) recurrent update.
 
     ``rows``: x is a compacted survivor sub-batch; row ``i`` updates row
-    ``rows[i]`` of the full-batch recurrent state (other rows untouched)."""
+    ``rows[i]`` of the full-batch recurrent state (other rows untouched).
+
+    ``use_kernels`` (decode only): the recurrent step runs in the Pallas
+    ssd_update kernel, which reads the survivor rows of the full-batch
+    resident SSM state through a scalar-prefetched row map (no gather
+    copy) — the tiny conv window still gathers in jnp."""
     inner, h, p, n, g, conv_dim = _dims(cfg)
     bsz, s, _ = x.shape
     dtype = x.dtype
@@ -193,7 +200,9 @@ def mamba_apply(
         assert state is not None and s == 1, "rows is a decode-only argument"
         state = {
             "conv": state["conv"][rows],
-            "ssm": state["ssm"][rows],
+            # The kernel path reads its rows of the resident state in
+            # place (scalar prefetch) — no gather; jnp gathers here.
+            "ssm": state["ssm"] if use_kernels else state["ssm"][rows],
             "length": state["length"],
         }
 
@@ -250,9 +259,17 @@ def mamba_apply(
                 "length": prev + s,
             }
     else:
-        y1, h_new = ssd_step(
-            state["ssm"], x_dt[:, 0], a_dt[:, 0], b_mat[:, 0], c_mat[:, 0]
-        )
+        if use_kernels:
+            # Pallas single-step SSD update; with ``rows`` the full
+            # resident state goes in and the kernel DMAs only those rows.
+            y1, h_new = kernel_ops.ssd_update(
+                state["ssm"], x_dt[:, 0], a_dt[:, 0],
+                b_mat[:, 0], c_mat[:, 0], rows,
+            )
+        else:
+            y1, h_new = ssd_step(
+                state["ssm"], x_dt[:, 0], a_dt[:, 0], b_mat[:, 0], c_mat[:, 0]
+            )
         y = y1[:, None]
         if rows is None:
             new_state = {

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.calibration import normalized_entropy
+from repro.kernels.ops import resolve_use_kernels
 from repro.sharding.ctx import constrain
 from repro.models.layers import (
     dense,
@@ -198,13 +199,19 @@ def run_trunk(
     remat: bool = False,
     moe_dispatch: str = "einsum",
     rows: jax.Array | None = None,  # (Bsub,) survivor rows (compacted decode)
+    use_kernels: bool = False,  # decode: Pallas flash_decode / ssd_update
 ) -> tuple[jax.Array, Params | None, jax.Array, dict[int, jax.Array]]:
     """Run trunk layers [lo, hi), segmenting at collect points and (hybrid)
     shared-attention sites.  Returns (h, new_caches, aux, {layer: hidden}).
 
     ``rows``: h is a dense survivor sub-batch; every stateful block reads
     and writes only those rows of the full-batch caches (per-sequence slot
-    validity in the KV caches masks the skipped rows' holes later)."""
+    validity in the KV caches masks the skipped rows' holes later).
+
+    ``use_kernels`` (decode only): every stateful block's single-token
+    math dispatches to the Pallas kernel suite — flash_decode streams
+    ``rows`` out of the resident KV cache, ssd_update does the same for
+    the SSM state."""
     layout = trunk_layout(cfg)
     total = sum(n for _, _, n in layout)
     lo, hi = layer_range or (0, total)
@@ -244,6 +251,7 @@ def run_trunk(
                 h, nc, a = run_stack(
                     sp, h, cfg, kind, positions, sc, cross,
                     remat=remat, moe_dispatch=moe_dispatch, rows=rows,
+                    use_kernels=use_kernels,
                 )
                 h = constrain(h, "b..")
                 aux = aux + a
@@ -264,7 +272,7 @@ def run_trunk(
             )
             h, nc, a = block_apply(
                 params["shared_attn"], h, cfg, _SHARED_ATTN_KIND, positions,
-                site_cache, rows=rows,
+                site_cache, rows=rows, use_kernels=use_kernels,
             )
             aux = aux + a
             if nc is not None and caches is not None:
@@ -531,9 +539,13 @@ def decode_step(
     moe_dispatch: str = "einsum",
     layer_range: tuple[int, int] | None = None,
     with_branches: bool = True,
+    use_kernels: bool | None = None,  # None = cfg.use_kernels (auto on TPU)
 ) -> dict[str, Any]:
     """One decode step.  Returns logits, per-branch entropies/exit masks
     (the paper's confidence test at each side branch), and updated caches."""
+    kernels = resolve_use_kernels(
+        cfg.use_kernels if use_kernels is None else use_kernels
+    )
     positions = pos[None].astype(jnp.int32)
     h = embed_decode(params, token, positions, cfg)
 
@@ -541,6 +553,7 @@ def decode_step(
     h2, new_caches, _, collected = run_trunk(
         params, h, cfg, positions, caches,
         layer_range=layer_range, collect=collect, moe_dispatch=moe_dispatch,
+        use_kernels=kernels,
     )
     out: dict[str, Any] = {}
     total = sum(n for _, _, n in trunk_layout(cfg))

@@ -102,11 +102,17 @@ def block_apply(
     cross_kv: tuple[jax.Array, jax.Array] | None = None,
     moe_dispatch: str = "einsum",
     rows: jax.Array | None = None,
+    use_kernels: bool = False,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Returns (h, new_cache, aux_loss).
 
     ``rows`` (decode only): h is a compacted survivor sub-batch; stateful
-    ops read/write rows ``rows`` of the full-batch cache/state."""
+    ops read/write rows ``rows`` of the full-batch cache/state.
+
+    ``use_kernels`` (decode only): GQA attention and Mamba2 recurrent
+    updates dispatch to the Pallas kernels (flash_decode / ssd_update);
+    MLA's absorbed-latent decode and cross-attention stay on the jnp
+    path (no kernel variant)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict[str, Any] = {}
     window = cfg.sliding_window
@@ -120,6 +126,7 @@ def block_apply(
                 use_rope=kind.use_rope,
                 window=window if kind.causal else 0,
                 rows=rows if sa_cache is not None else None,
+                use_kernels=use_kernels and sa_cache is not None,
             )
         else:
             y, c = attn_mod.mla_apply(
@@ -135,6 +142,7 @@ def block_apply(
             params["mamba"], hn, cfg,
             state=cache.get("self") if cache else None,
             rows=rows if cache else None,
+            use_kernels=use_kernels and cache is not None,
         )
         h = h + y
         if c is not None:
@@ -187,11 +195,14 @@ def run_stack(
     remat: bool = False,
     moe_dispatch: str = "einsum",
     rows: jax.Array | None = None,
+    use_kernels: bool = False,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Scan the blocks of a (slice of a) stack over the residual stream.
 
     Returns (h, new stacked caches, summed aux loss).  ``rows`` threads the
-    survivor-compaction row map into every stateful block (decode only).
+    survivor-compaction row map into every stateful block (decode only);
+    ``use_kernels`` dispatches each stateful block's decode math to the
+    Pallas kernels.
     """
 
     if caches is None:
@@ -229,7 +240,7 @@ def run_stack(
         )
         h, new_cache, aux = block_apply(
             lparams, h, cfg, kind, positions, lcache, lcross,
-            moe_dispatch=moe_dispatch, rows=rows,
+            moe_dispatch=moe_dispatch, rows=rows, use_kernels=use_kernels,
         )
         cache_full = jax.tree_util.tree_map(
             lambda full, one: jax.lax.dynamic_update_index_in_dim(

@@ -82,6 +82,13 @@ class RepartitionController:
     every_n_steps: int = 0  # decode-loop hook cadence (0 = explicit only)
     batch: int | None = None  # bucketed-aware solving (K=2 and K>=3)
     window_steps: int = 256  # drift-window decay horizon (see observe())
+    # Epsilon exploration schedule: every ``explore_every_n`` observed
+    # steps, request a PROBE step from the executor — the next decode step
+    # evaluates every branch head (would-exit masks reported, trajectory
+    # untouched), so branches the installed plan discarded keep fresh
+    # measured probabilities instead of carrying the installed estimate.
+    # 0 disables exploration.
+    explore_every_n: int = 0
 
     def __post_init__(self):
         if isinstance(self.server, MultiTierServer) and self.tiers is None:
@@ -172,12 +179,25 @@ class RepartitionController:
         for j, layer in enumerate(self.server.cfg.branch_layers):
             take = report.branch_take.get(layer)
             if take is None:
-                continue  # branch not evaluated under this plan
+                continue  # branch not evaluated under this plan (nor probed)
             self._arrivals[j] += float(alive.sum())
-            self._exits[j] += float(take.sum())
+            # Intersect with the running alive mask: on a probe step an
+            # earlier (discarded) branch's would-exit rows have left
+            # `alive`, but the executor computed this branch's take under
+            # *plan* semantics, so the masks can overlap — counting the
+            # overlap would push the conditional estimate past 1.
+            self._exits[j] += float((take & alive).sum())
             alive &= ~take
         self._steps_observed += 1
         self._window_age += 1
+        if (
+            self.explore_every_n
+            and self._steps_observed % self.explore_every_n == 0
+        ):
+            # Epsilon step: the next decode step probes every branch head.
+            # Its report carries would-exit masks for the discarded
+            # branches too, which the loop above folds into the window.
+            self.server.executor.probe_next = True
         if self._window_age >= self.window_steps:
             # Exponential decay: halve the window so the measured
             # distribution tracks regime changes in O(window_steps) steps

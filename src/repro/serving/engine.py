@@ -64,13 +64,19 @@ class ServingEngine:
     cfg: ModelConfig
     params: Any
     context_len: int = 4096
+    # Decode hot path on the Pallas kernels; None = cfg.use_kernels
+    # (still None = auto: kernels on TPU, jnp elsewhere).
+    use_kernels: bool | None = None
 
     def __post_init__(self):
         cfg = self.cfg
         self._prefill = jax.jit(
             lambda params, inputs, caches: M.prefill(params, inputs, cfg, caches)
         )
-        self._exec = TierExecutor(cfg, self.params, segments_for_cuts(cfg, ()))
+        self._exec = TierExecutor(
+            cfg, self.params, segments_for_cuts(cfg, ()),
+            use_kernels=self.use_kernels,
+        )
 
     def start(self, inputs: dict) -> dict:
         """Prefill a batch of prompts; returns mutable serve state."""

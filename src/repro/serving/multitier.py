@@ -44,6 +44,9 @@ class MultiTierStepReport:
     compaction: tuple[HopCompaction, ...] = ()  # per-hop (survivors, bucket)
     branch_take: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
     sim_transfer_s: tuple[float, ...] = ()  # simulated uplink wall time
+    # Cumulative executor health counters (bucket-policy observability).
+    overflow_retries: int = 0
+    pipeline_fallbacks: int = 0
 
 
 @dataclasses.dataclass
@@ -56,6 +59,9 @@ class MultiTierServer:
     compaction: str = "bucketed"  # "off" = legacy masked full-batch tiers
     simulate_network: bool = False  # sleep each hop's transfer time
     overlap: str = "serial"  # "pipelined" = overlap transfers with compute
+    use_kernels: bool | None = None  # Pallas decode path; None = cfg/auto
+    hint_window: int = 8  # windowed-max bucket hints (1 = last step only)
+    bucket_headroom: float = 0.0  # fractional bucket padding vs retries
 
     def __post_init__(self):
         self.tiers = tuple(self.tiers)
@@ -70,6 +76,9 @@ class MultiTierServer:
             compaction=self.compaction,
             simulate_network=self.simulate_network,
             overlap=self.overlap,
+            use_kernels=self.use_kernels,
+            hint_window=self.hint_window,
+            bucket_headroom=self.bucket_headroom,
         )
 
     @classmethod
@@ -127,6 +136,8 @@ class MultiTierServer:
             compaction=res.compaction,
             branch_take=res.branch_take,
             sim_transfer_s=res.sim_transfer_s,
+            overflow_retries=self.executor.overflow_retries,
+            pipeline_fallbacks=self.executor.pipeline_fallbacks,
         )
         return rep, caches
 

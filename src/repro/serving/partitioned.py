@@ -48,6 +48,11 @@ class StepReport:
     compaction: tuple[HopCompaction, ...] = ()  # cloud sub-batch shape
     branch_take: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
     sim_transfer_s: tuple[float, ...] = ()  # simulated uplink wall time
+    # Cumulative executor health counters (bucket-policy observability):
+    # steps re-run on bucket overflow, and pipelined steps that fell back
+    # to serial because of one.
+    overflow_retries: int = 0
+    pipeline_fallbacks: int = 0
 
 
 @dataclasses.dataclass
@@ -60,6 +65,9 @@ class PartitionedServer:
     compaction: str = "bucketed"  # "off" = legacy masked full-batch cloud
     simulate_network: bool = False  # sleep each hop's transfer time
     overlap: str = "serial"  # "pipelined" = overlap transfers with compute
+    use_kernels: bool | None = None  # Pallas decode path; None = cfg/auto
+    hint_window: int = 8  # windowed-max bucket hints (1 = last step only)
+    bucket_headroom: float = 0.0  # fractional bucket padding vs retries
 
     def __post_init__(self):
         self.executor = TierExecutor(
@@ -67,6 +75,9 @@ class PartitionedServer:
             compaction=self.compaction,
             simulate_network=self.simulate_network,
             overlap=self.overlap,
+            use_kernels=self.use_kernels,
+            hint_window=self.hint_window,
+            bucket_headroom=self.bucket_headroom,
         )
 
     def _segments(self, s: int):
@@ -96,6 +107,8 @@ class PartitionedServer:
             compaction=res.compaction,
             branch_take=res.branch_take,
             sim_transfer_s=res.sim_transfer_s,
+            overflow_retries=self.executor.overflow_retries,
+            pipeline_fallbacks=self.executor.pipeline_fallbacks,
         )
         return rep, caches
 

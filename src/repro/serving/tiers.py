@@ -98,16 +98,59 @@ independent of bucket/padding choices; single-step outputs are bitwise
 identical to the masked path, multi-step outputs are identical whenever
 an exited sequence does not later re-enter the downstream tiers.
 
+Kernel-backed hot path (``use_kernels``)
+----------------------------------------
+``use_kernels=None`` (auto) turns the Pallas kernel suite on on TPU and
+keeps the pure-jnp lowering elsewhere; ``True`` forces the kernels (CPU
+runs them in interpret mode — the equivalence tests).  Inside every
+segment function the flag swaps three hot spots, leaving the dataflow,
+the one-sync contract and the emitted trajectory unchanged:
+
+  * decode attention runs :func:`repro.kernels.ops.flash_decode`, which
+    scalar-prefetches the survivor ``rows`` map and streams those rows
+    straight out of the full-batch resident KV cache (the jnp path
+    gathers ``cache["k"][rows]`` and hopes XLA fuses it);
+  * the per-branch BranchyNet confidence test runs the fused
+    :func:`repro.kernels.ops.entropy_exit_argmax` kernel — normalized
+    entropy, threshold flag and exit token in ONE pass over the (B, V)
+    branch logits, so exiting rows never materialize a separate
+    softmax + argmax;
+  * Mamba2 decode steps run :func:`repro.kernels.ops.ssd_update` with the
+    same ``rows`` plumbing into the resident SSM state.
+
+Kernels recompile per *bucket* exactly like the jnp segment functions
+(the (spec, bucket) cache below); a survivor-count change within a bucket
+never re-traces either path.
+
+Bucket hints.  The bucket planned for a downstream tier comes from a
+*windowed max* of the last ``hint_window`` steps' survivor counts
+(default 8) inflated by ``bucket_headroom`` (a fraction; 0.0 = exact
+fit).  ``hint_window=1, bucket_headroom=0.0`` reproduces the historical
+last-step-only exact-fit policy; wider windows / headroom trade padding
+waste for fewer ``overflow_retries`` under fluctuating exit rates.
+
+Probe steps (exploration).  A plan only evaluates the branches it kept,
+so drift detection is blind to discarded branches.  Setting
+``probe_next = True`` (the :class:`RepartitionController`'s epsilon
+schedule does this every ``explore_every_n`` steps) makes the *next*
+step evaluate every ``cfg.branch_layers`` head — the extra branches are
+report-only: their would-exit masks and entropies appear in
+``branch_take`` / ``branch_entropy`` so the controller refreshes their
+probabilities, but exits, tokens, caches and byte accounting are bitwise
+those of a normal step.
+
 Segment functions are cached by ``(spec, bucket)`` where spec is
-``(layer_lo, layer_hi, branches, head)``: a repartition that moves one
-cut re-uses the jitted callables of every unchanged tier segment, and a
-survivor-count change *within* a bucket re-jits nothing
+``(layer_lo, layer_hi, branches, head, probe)``: a repartition that moves
+one cut re-uses the jitted callables of every unchanged tier segment, and
+a survivor-count change *within* a bucket re-jits nothing
 (``trace_counts`` exposes this for tests).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
 from typing import Any, Sequence
 
@@ -118,6 +161,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.calibration import normalized_entropy
 from repro.core.multitier import bucket_for
+from repro.kernels import ops as kernel_ops
 from repro.models.layers import norm_apply
 from repro.models.model import (
     _branch_logits,
@@ -277,6 +321,16 @@ class TierExecutor:
     link clocks overlapped with the next step's compute and double-buffers
     decode steps (see the module docstring) — steady-state step wall time
     is the bottleneck stage, tokens stay bitwise identical.
+
+    ``use_kernels``: dispatch the decode hot path to the Pallas kernels
+    (flash_decode / fused entropy-exit+argmax / ssd_update).  None = the
+    config's ``cfg.use_kernels``; a still-None config means auto (kernels
+    on TPU, jnp elsewhere).
+
+    ``hint_window`` / ``bucket_headroom``: bucket hint policy — plan each
+    downstream tier's bucket from the max survivor count of the last
+    ``hint_window`` steps, inflated by ``bucket_headroom`` (fractional;
+    see the module docstring).
     """
 
     def __init__(
@@ -288,16 +342,32 @@ class TierExecutor:
         compaction: str = "bucketed",
         simulate_network: bool = False,
         overlap: str = "serial",
+        use_kernels: bool | None = None,
+        hint_window: int = 8,
+        bucket_headroom: float = 0.0,
     ):
         if compaction not in ("bucketed", "off"):
             raise ValueError(f"unknown compaction mode: {compaction!r}")
         if overlap not in ("serial", "pipelined"):
             raise ValueError(f"unknown overlap mode: {overlap!r}")
+        if hint_window < 1:
+            raise ValueError(f"hint_window must be >= 1: {hint_window}")
+        if bucket_headroom < 0.0:
+            raise ValueError(f"bucket_headroom must be >= 0: {bucket_headroom}")
         self.cfg = cfg
         self.params = params
         self.compaction = compaction
         self.simulate_network = simulate_network
         self.overlap = overlap
+        self.use_kernels = kernel_ops.resolve_use_kernels(
+            cfg.use_kernels if use_kernels is None else use_kernels
+        )
+        self.hint_window = hint_window
+        self.bucket_headroom = bucket_headroom
+        #: Set to make the NEXT step a probe: every cfg.branch_layers head
+        #: is evaluated and reported (would-exit masks + entropies) without
+        #: touching exits/tokens/caches.  Consumed by step().
+        self.probe_next = False
         self.total_layers = sum(n for _, _, n in trunk_layout(cfg))
         self._fn_cache: dict[tuple, Any] = {}
         self.host_syncs = 0
@@ -338,30 +408,60 @@ class TierExecutor:
             if not seg.is_empty else None
             for i, seg in enumerate(segments)
         ]
-        # Survivor-count hints (segment index -> last observed count) are
-        # plan-specific; a fresh plan starts conservatively at full batch.
-        self._hints: dict[int, int] = {}
+        # Survivor-count hints (segment index -> windowed-max survivor
+        # count over the last hint_window steps) are plan-specific; a fresh
+        # plan starts conservatively at full batch.  ``_hints`` is the
+        # effective per-segment hint the planner consumes (tests may pin
+        # it); ``_hint_hist`` is the observation window feeding it.
+        self._hints = {}
+        self._hint_hist = {}
 
     def segment_fn(self, index: int):
         """The compiled full-batch callable for segment ``index``
         (None if the segment is empty)."""
         return self._fns[index]
 
-    def _segment_fn(self, seg: TierSegment, head: bool, bucket: int | None = None):
+    def _segment_fn(
+        self,
+        seg: TierSegment,
+        head: bool,
+        bucket: int | None = None,
+        probe: tuple[int, ...] = (),
+    ):
         """Build (or fetch) the jitted callable for one tier segment.
 
         ``bucket=None``: masked full-batch execution (the entry tier, and
         every tier in compaction="off" mode).  ``bucket=b``: the fused
         compact(b) -> run -> scatter step described in the module
-        docstring.  All variants share the signature
+        docstring.  ``probe``: extra branch layers evaluated report-only
+        (would-exit masks + entropies; exits/tokens untouched).  All
+        variants share the signature
         ``fn(params, x, pos, exited, chosen, caches)`` with full-batch x.
         """
-        key = (seg.spec(head), bucket)
+        key = ((*seg.spec(head), probe), bucket)
         if key in self._fn_cache:
             return self._fn_cache[key]
         cfg = self.cfg
         lo, hi, branches = seg.layer_lo, seg.layer_hi, seg.branches
+        plan_set = frozenset(branches)
+        eval_layers = tuple(sorted({*branches, *probe}))
+        use_kernels = self.use_kernels
         trace_counts = self.trace_counts
+
+        def exit_decision(logits_b, ex):
+            """(take mask, entropy, exit token) for one branch head.  The
+            kernel path fuses all three into one pass over (B, V); both
+            paths break argmax ties identically (first occurrence), so the
+            emitted token is bitwise path-independent."""
+            if use_kernels:
+                e, flag, btok = kernel_ops.entropy_exit_argmax(
+                    logits_b, cfg.exit_threshold
+                )
+            else:
+                e = normalized_entropy(logits_b)
+                flag = e < cfg.exit_threshold
+                btok = jnp.argmax(logits_b, -1).astype(jnp.int32)
+            return flag & ~ex, e, btok
 
         def fn(params, x, pos, exited, chosen, caches):
             trace_counts[key] = trace_counts.get(key, 0) + 1
@@ -384,24 +484,29 @@ class TierExecutor:
             h = embed_decode(params, xb, positions, cfg) if lo == 0 else xb
             h, new_caches, _, collected = run_trunk(
                 params, h, cfg, positions, caches,
-                layer_range=(lo, hi), collect=branches, rows=rows_rw,
+                layer_range=(lo, hi), collect=eval_layers, rows=rows_rw,
+                use_kernels=use_kernels,
             )
             bl = _branch_logits(params, collected, cfg)
             sub = xb.shape[0]
-            takes, ents = [], []
-            for layer in branches:
-                logits_b = bl[layer][:, 0]
-                e = normalized_entropy(logits_b)
-                take = (e < cfg.exit_threshold) & ~ex
-                ch = jnp.where(
-                    take, jnp.argmax(logits_b, -1).astype(jnp.int32), ch
-                )
-                ex = ex | take
-                takes.append(take)
-                ents.append(e)
+            takes, ents, ptakes, pents = [], [], [], []
+            for layer in eval_layers:
+                take, e, btok = exit_decision(bl[layer][:, 0], ex)
+                if layer in plan_set:
+                    ch = jnp.where(take, btok, ch)
+                    ex = ex | take
+                    takes.append(take)
+                    ents.append(e)
+                else:  # probe: report-only, never alters the trajectory
+                    ptakes.append(take)
+                    pents.append(e)
             take_s = jnp.stack(takes) if takes else jnp.zeros((0, sub), bool)
             ents_s = (
                 jnp.stack(ents) if ents else jnp.zeros((0, sub), jnp.float32)
+            )
+            ptake_s = jnp.stack(ptakes) if ptakes else jnp.zeros((0, sub), bool)
+            pents_s = (
+                jnp.stack(pents) if pents else jnp.zeros((0, sub), jnp.float32)
             )
             out: dict[str, Any] = {"caches": new_caches}
             logits = None
@@ -416,6 +521,7 @@ class TierExecutor:
             if bucket is None:
                 out["exited"], out["chosen"] = ex, ch
                 out["take"], out["ents"] = take_s, ents_s
+                out["ptake"], out["pents"] = ptake_s, pents_s
                 if head:
                     out["logits"] = logits
                 else:
@@ -430,6 +536,14 @@ class TierExecutor:
                 )
                 out["ents"] = (
                     jnp.zeros((nbr, batch), jnp.float32).at[:, rows].set(ents_s)
+                )
+                out["ptake"] = (
+                    jnp.zeros((len(probe), batch), bool)
+                    .at[:, rows].set(ptake_s)
+                )
+                out["pents"] = (
+                    jnp.zeros((len(probe), batch), jnp.float32)
+                    .at[:, rows].set(pents_s)
                 )
                 if head:
                     out["logits"] = (
@@ -481,8 +595,9 @@ class TierExecutor:
 
     # -------------------------------------------------------------- step
     def _plan_buckets(self, batch: int) -> dict[int, int]:
-        """Host-side bucket plan for this step, from last step's survivor
-        counts (full batch where no hint exists yet)."""
+        """Host-side bucket plan for this step: the windowed-max survivor
+        hint per downstream segment (full batch where no hint exists yet),
+        inflated by ``bucket_headroom`` and rounded up the bucket ladder."""
         if self.compaction != "bucketed":
             return {}
         executed = [
@@ -490,15 +605,49 @@ class TierExecutor:
         ]
         buckets = {}
         for i in executed[1:]:
-            buckets[i] = bucket_for(self._hints.get(i, batch), batch)
+            hint = self._hints.get(i, batch)
+            padded = min(batch, math.ceil(hint * (1.0 + self.bucket_headroom)))
+            buckets[i] = bucket_for(padded, batch)
         return buckets
 
+    def _observe_hints(self, entering: dict[int, int]) -> None:
+        """Feed this step's entering-survivor counts into the hint window
+        and refresh the effective per-segment hints (windowed max)."""
+        for i, count in entering.items():
+            hist = self._hint_hist.get(i)
+            if hist is None or hist.maxlen != self.hint_window:
+                hist = collections.deque(hist or (), maxlen=self.hint_window)
+                self._hint_hist[i] = hist
+            hist.append(count)
+        self._hints = {
+            i: max(hist) for i, hist in self._hint_hist.items() if hist
+        }
+
+    def _probe_layers(self) -> dict[int, tuple[int, ...]]:
+        """Branch layers a probe step evaluates on top of the plan, keyed
+        by segment index: every cfg.branch_layers head lands on the tier
+        whose layer range contains it (a branch at a cut probes on the
+        upstream tier; the final tier probes its interior branches)."""
+        out: dict[int, tuple[int, ...]] = {}
+        for i, seg in enumerate(self.segments):
+            if seg.is_empty:
+                continue
+            extra = tuple(sorted(
+                b for b in self.cfg.branch_layers
+                if seg.layer_lo < b <= seg.layer_hi and b not in seg.branches
+            ))
+            if extra:
+                out[i] = extra
+        return out
+
     def _run_once(
-        self, tok: jax.Array, pos, caches: Any, buckets: dict[int, int]
+        self, tok: jax.Array, pos, caches: Any, buckets: dict[int, int],
+        probe_map: dict[int, tuple[int, ...]] | None = None,
     ) -> tuple:
         """Dispatch all tier segments and perform the single host sync.
         Returns (host dict, caches, entering-survivor counts per segment,
         chosen, logits, alive-after-segment counts)."""
+        probe_map = probe_map or {}
         cfg = self.cfg
         batch = tok.shape[0]
         posj = jnp.asarray(pos, jnp.int32)
@@ -513,7 +662,8 @@ class TierExecutor:
                 continue
             head = i == self._head_idx
             b = buckets.get(i)
-            if b is None:
+            pr = probe_map.get(i, ())
+            if b is None and not pr:
                 fn = self._fns[i]
             else:
                 # Downstream tiers always run the compact->run->scatter fn
@@ -521,13 +671,18 @@ class TierExecutor:
                 # rows' downstream cache writes are always dropped and KV
                 # validity stays a pure function of exits, never of which
                 # fn variant a hint happened to select.
-                fn = self._segment_fn(seg, head, min(b, batch))
+                fn = self._segment_fn(
+                    seg, head, None if b is None else min(b, batch), probe=pr
+                )
             out = fn(self.params, x, posj, exited, chosen, caches)
             caches = out["caches"]
             exited, chosen = out["exited"], out["chosen"]
             if seg.branches:
                 fetch[f"take{i}"] = out["take"]
                 fetch[f"ents{i}"] = out["ents"]
+            if pr:
+                fetch[f"ptake{i}"] = out["ptake"]
+                fetch[f"pents{i}"] = out["pents"]
             if head:
                 logits = out["logits"]
             else:
@@ -558,9 +713,11 @@ class TierExecutor:
         one per rare overflow-retry iteration, see module docstring)."""
         cfg = self.cfg
         batch = tok.shape[0]
+        probe_map = self._probe_layers() if self.probe_next else {}
+        self.probe_next = False
         buckets = self._plan_buckets(batch)
         host, new_caches, entering, chosen, logits, alive = self._run_once(
-            tok, pos, caches, buckets
+            tok, pos, caches, buckets, probe_map
         )
         used = {
             i: min(buckets.get(i, batch), batch) for i in entering
@@ -591,12 +748,14 @@ class TierExecutor:
                     for i in entering
                 }
             host, new_caches, entering, chosen, logits, alive = self._run_once(
-                tok, pos, caches, buckets
+                tok, pos, caches, buckets, probe_map
             )
             used = {i: min(buckets.get(i, batch), batch) for i in entering}
-        self._hints = dict(entering)
+        self._observe_hints(entering)
 
-        # Per-branch attribution from the fetched masks.
+        # Per-branch attribution from the fetched masks.  Probe branches
+        # report would-exit masks/entropies only — they never touch
+        # exit_tier (the trajectory is that of a normal step).
         exit_tier = np.full((batch,), -1, np.int32)
         branch_take: dict[int, np.ndarray] = {}
         branch_entropy: dict[int, np.ndarray] = {}
@@ -606,6 +765,9 @@ class TierExecutor:
                 branch_take[layer] = mask
                 branch_entropy[layer] = host[f"ents{i}"][row]
                 exit_tier[mask] = i
+            for row, layer in enumerate(probe_map.get(i, ())):
+                branch_take[layer] = host[f"ptake{i}"][row]
+                branch_entropy[layer] = host[f"pents{i}"][row]
 
         # Hops: one per cut that still has layers (or the head) downstream.
         shipped, nbytes, compaction = [], [], []

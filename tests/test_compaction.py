@@ -106,8 +106,15 @@ class TestBitwiseEquivalence:
         warm the hints with one step, then compare a step from fresh
         identical caches on both paths."""
         cfg0, params = deep_model
+        # A midpoint threshold doesn't guarantee >half exit *at branch 1*
+        # (the only branch before the cut); sit between the 6th and 7th
+        # smallest branch-1 entropies so 6 of 8 exit on the edge and the
+        # cloud bucket really shrinks below the 8-row batch.
+        ex0 = TierExecutor(cfg0, params, segments_for_cuts(cfg0, ()))
+        r0, _ = ex0.step(_toks(cfg0, 8), 0, M.init_caches(cfg0, 8, 32))
+        b1 = np.sort(r0.branch_entropy[1])
         cfg = dataclasses.replace(
-            cfg0, exit_threshold=_mixed_threshold(cfg0, params)
+            cfg0, exit_threshold=float((b1[5] + b1[6]) / 2)
         )
         exm = TierExecutor(cfg, params, segments_for_cuts(cfg, (2,)),
                            compaction="off")

@@ -7,9 +7,12 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.entropy_exit import entropy_exit_pallas
+from repro.kernels.entropy_exit import (
+    entropy_exit_argmax_pallas,
+    entropy_exit_pallas,
+)
 from repro.kernels.flash_decode import flash_decode_pallas
-from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas, ssd_update_pallas
 
 
 def tol(dtype):
@@ -41,6 +44,132 @@ class TestEntropyExit:
         h, ex = entropy_exit_pallas(jnp.zeros((2, 512)), 0.99, interpret=True)
         assert np.allclose(np.asarray(h), 1.0, atol=1e-5)
         assert not np.asarray(ex).any()
+
+
+class TestEntropyExitArgmax:
+    """The fused exit-decision kernel: entropy + threshold flag + argmax
+    token in one pass (the serving hot path's per-branch confidence test)."""
+
+    @pytest.mark.parametrize("b,v", [(1, 128), (4, 1000), (8, 2048),
+                                     (3, 5003), (16, 32064)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, v, dtype):
+        key = jax.random.PRNGKey(b * v + 1)
+        logits = (jax.random.normal(key, (b, v), jnp.float32) * 4).astype(dtype)
+        h, ex, idx = entropy_exit_argmax_pallas(logits, 0.6, interpret=True)
+        hr, exr, ir = ref.entropy_exit_argmax_ref(logits, 0.6)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(hr), **tol(dtype))
+        # The token must be bitwise the jnp argmax — it is what the branch
+        # emits on exit, and trajectory equivalence depends on it.
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ir))
+        # Flags may differ only within tolerance of the knife edge.
+        diff = np.asarray(ex) != np.asarray(exr)
+        assert np.all(np.abs(np.asarray(hr)[diff] - 0.6) < 1e-2)
+
+    def test_argmax_tie_breaks_first_occurrence(self):
+        """Duplicated maxima inside one tile and across tiles both resolve
+        to the first index, like jnp.argmax."""
+        l = jnp.zeros((2, 4096)).at[:, 100].set(5.0).at[:, 3000].set(5.0)
+        _, _, idx = entropy_exit_argmax_pallas(l, 0.5, interpret=True)
+        np.testing.assert_array_equal(np.asarray(idx), [100, 100])
+        l = jnp.zeros((1, 256)).at[0, 7].set(2.0).at[0, 9].set(2.0)
+        _, _, idx = entropy_exit_argmax_pallas(l, 0.5, interpret=True)
+        assert int(idx[0]) == 7
+
+    def test_threshold_boundary_is_strict(self):
+        """Regression (exit-threshold semantics): an entropy exactly AT the
+        threshold does not exit — in the kernel, the ref oracle, and the
+        serving inline computation alike (the decision is `H < t`)."""
+        from repro.core.calibration import normalized_entropy
+
+        logits = jax.random.normal(jax.random.PRNGKey(0), (4, 512)) * 3
+        h_inline = normalized_entropy(logits)
+        t = float(h_inline[1])  # sit exactly on row 1's entropy
+        assert not bool(h_inline[1] < t)
+        hr, exr = ref.entropy_exit_ref(logits, t)
+        assert not bool(exr[1])
+        h, ex, _ = entropy_exit_argmax_pallas(logits, t, interpret=True)
+        # Kernel entropy may differ in the last ulp; the *semantics* are
+        # strict-less-than against its own entropy value.
+        assert not bool(h[1] < t) or abs(float(h[1]) - t) < 1e-6
+
+    def test_normalization_matches_serving_inline(self):
+        """Regression (log-base bugfix): the serving exit threshold
+        (core.calibration.normalized_entropy), the kernel and the ref all
+        normalize by log of the logits WIDTH in fp32 — including when the
+        logits carry -1e30-masked vocab-padding lanes (padded_vocab_size),
+        which contribute nothing to any accumulator."""
+        from repro.core.calibration import normalized_entropy
+
+        key = jax.random.PRNGKey(3)
+        real = jax.random.normal(key, (5, 1000), jnp.float32) * 4
+        padded = jnp.pad(real, ((0, 0), (0, 24)), constant_values=-1e30)
+        h_inline = normalized_entropy(padded)
+        hr, _ = ref.entropy_exit_ref(padded, 0.5)
+        hk, _, _ = entropy_exit_argmax_pallas(padded, 0.5, interpret=True)
+        assert h_inline.dtype == jnp.float32
+        # Inline path and ref oracle are the same ops — exact agreement.
+        np.testing.assert_array_equal(np.asarray(h_inline), np.asarray(hr))
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                                   rtol=2e-6, atol=2e-6)
+        # bf16 logits: the inline path must also run fp32 math (the bf16
+        # softmax it used to do would disagree with the kernel at the
+        # threshold knife edge).
+        h_bf = normalized_entropy(real.astype(jnp.bfloat16))
+        assert h_bf.dtype == jnp.float32
+
+
+class TestSSDUpdate:
+    """The single-step SSD decode kernel with the survivor row map."""
+
+    @pytest.mark.parametrize(
+        "bc,b,h,p,n,g",
+        [
+            (4, 4, 4, 64, 32, 4),  # rows=None full batch, G == H
+            (6, 3, 4, 64, 32, 2),  # compacted sub-batch, grouped B/C
+            (8, 2, 24, 64, 128, 1),  # mamba2-130m head shape, 1 group
+            (5, 5, 2, 128, 64, 2),
+        ],
+    )
+    def test_matches_ref(self, bc, b, h, p, n, g):
+        ks = jax.random.split(jax.random.PRNGKey(bc * b + h), 5)
+        hs = jax.random.normal(ks[0], (bc, h, p, n), jnp.float32)
+        x = jax.random.normal(ks[1], (b, h, p)) * 0.5
+        a = -jnp.abs(jax.random.normal(ks[2], (b, h))) * 0.3
+        bv = jax.random.normal(ks[3], (b, g, n)) * 0.5
+        cv = jax.random.normal(ks[4], (b, g, n)) * 0.5
+        rows = None
+        if b < bc:
+            rows = jnp.asarray(
+                np.random.default_rng(0).choice(bc, size=b, replace=False),
+                jnp.int32,
+            )
+        y, hn = ssd_update_pallas(hs, x, a, bv, cv, rows, interpret=True)
+        yr, hnr = ref.ssd_update_ref(hs, x, a, bv, cv, rows)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(hn), np.asarray(hnr),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_matches_model_ssd_step(self):
+        """The kernel agrees with models.mamba.ssd_step on gathered rows —
+        the jnp decode path it replaces."""
+        from repro.models.mamba import ssd_step
+
+        ks = jax.random.split(jax.random.PRNGKey(9), 5)
+        bc, b, h, p, n, g = 6, 3, 4, 32, 16, 2
+        hs = jax.random.normal(ks[0], (bc, h, p, n), jnp.float32)
+        x = jax.random.normal(ks[1], (b, h, p)) * 0.5
+        a = -jnp.abs(jax.random.normal(ks[2], (b, h))) * 0.3
+        bv = jax.random.normal(ks[3], (b, g, n)) * 0.5
+        cv = jax.random.normal(ks[4], (b, g, n)) * 0.5
+        rows = jnp.asarray([5, 0, 3], jnp.int32)
+        y_k, h_k = ssd_update_pallas(hs, x, a, bv, cv, rows, interpret=True)
+        y_m, h_m = ssd_step(hs[rows], x, a, bv, cv)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_m),
+                                   rtol=1e-5, atol=1e-5)
 
 
 class TestFlashDecode:

@@ -1,17 +1,20 @@
 #!/bin/sh
 # Tier-1 CI entry: run the test suite exactly as ROADMAP.md specifies
-# (tests/test_compaction.py and the runtime/controller suites are part of
-# the default collection), then smoke-run the serving benchmark sweep in
-# fast mode so the masked-vs-compacted FLOPs assertion, the 1-sync
-# invariant, and the serial-vs-pipelined overlap cell (pipelined
-# steady-state step time <= serial under simulate_network=True, plus the
-# overlap plan flip) are exercised end to end on every CI pass.
+# (tests/test_compaction.py, tests/test_kernel_runtime.py and the
+# runtime/controller suites are part of the default collection), then
+# smoke-run the serving benchmark sweep and the kernel-vs-jnp decode
+# sweep in fast mode so the masked-vs-compacted FLOPs assertion, the
+# 1-sync invariant, the serial-vs-pipelined overlap cell, and every
+# Pallas kernel path (interpret mode off-TPU, identical-trajectory
+# assert inline) are exercised end to end on every CI pass.
 # Usage: tools/ci.sh [extra pytest args]
-#   REPRO_CI_BENCH=0 skips the benchmark smoke (pytest only).
+#   REPRO_CI_BENCH=0 skips the benchmark smokes (pytest only).
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 if [ "${REPRO_CI_BENCH:-1}" != "0" ]; then
     REPRO_BENCH_FAST=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python benchmarks/serving_step.py
+    REPRO_BENCH_FAST=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python benchmarks/kernel_micro.py
 fi
