@@ -1,13 +1,13 @@
 PY := python
 
-.PHONY: test test-fast bench-serving bench-serving-fast bench-overlap bench-kernels bench-kernels-full example
+.PHONY: test test-fast bench-serving bench-serving-fast bench-overlap bench-requests bench-kernels bench-kernels-full example
 
 # Tier-1 verify (ROADMAP): the full suite with the src layout on the path.
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 test-fast:
-	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_tiers.py tests/test_compaction.py tests/test_multitier.py tests/test_hlo_analysis.py
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_tiers.py tests/test_compaction.py tests/test_scheduler.py tests/test_multitier.py tests/test_hlo_analysis.py
 
 bench-serving:
 	PYTHONPATH=src $(PY) benchmarks/serving_step.py
@@ -20,6 +20,12 @@ bench-serving-fast:
 # step time <= serial under simulate_network=True and the plan flip.
 bench-overlap:
 	REPRO_BENCH_FAST=1 REPRO_BENCH_ONLY=overlap PYTHONPATH=src $(PY) benchmarks/serving_step.py
+
+# Continuous-vs-lock-step request cell only: Poisson arrivals, mixed
+# prompt lengths/budgets with early exits; asserts continuous admission
+# beats gang (lock-step) tokens/sec at one host sync per decode step.
+bench-requests:
+	REPRO_BENCH_FAST=1 REPRO_BENCH_ONLY=requests PYTHONPATH=src $(PY) benchmarks/serving_step.py
 
 # Kernel-vs-jnp decode hot path sweep (flash_decode / fused exit decision /
 # ssd_update / end-to-end TierExecutor step) in CI smoke mode: tiny shapes,

@@ -35,8 +35,10 @@ from repro.core.profiler import (
     HardwareSpec,
     LayerCost,
     analyze_layer_costs,
+    decode_layer_fns,
     measure_layer_times,
     output_bytes,
+    profile_decode_layers,
 )
 from repro.core.shortest_path import (
     brute_force_split,
@@ -88,6 +90,8 @@ __all__ = [
     "TPU_V5E",
     "LayerCost",
     "analyze_layer_costs",
+    "decode_layer_fns",
     "measure_layer_times",
+    "profile_decode_layers",
     "output_bytes",
 ]

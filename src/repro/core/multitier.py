@@ -137,7 +137,9 @@ def _infeasible_error(tiers: list[TierSpec]) -> ValueError:
 _BUCKETED_ENUM_CAP = 50_000
 
 
-def _solve_enumerated(t_c, alpha, p, tiers, batch, overlap) -> "MultiTierPlan | None":
+def _solve_enumerated(
+    t_c, alpha, p, tiers, batch, overlap, occupancy=None
+) -> "MultiTierPlan | None":
     """Exact solve by enumeration: argmin over monotone cut vectors of the
     closed-form fixed-cut cost (entry-frozen bucketed and/or pipelined).
     Returns None when the enumeration would exceed ``_BUCKETED_ENUM_CAP``
@@ -146,7 +148,8 @@ def _solve_enumerated(t_c, alpha, p, tiers, batch, overlap) -> "MultiTierPlan | 
     k = len(tiers)
     if k == 1:
         cost = expected_time_multitier(
-            t_c, alpha, p, tiers, (), batch=batch, overlap=overlap
+            t_c, alpha, p, tiers, (), batch=batch, overlap=overlap,
+            occupancy=occupancy,
         )
         return MultiTierPlan((), cost, tuple([0] * n))
     if math.comb(n + k - 1, k - 1) > _BUCKETED_ENUM_CAP:
@@ -154,7 +157,8 @@ def _solve_enumerated(t_c, alpha, p, tiers, batch, overlap) -> "MultiTierPlan | 
     best_cost, best_cuts = np.inf, None
     for cuts in itertools.combinations_with_replacement(range(n + 1), k - 1):
         c = expected_time_multitier(
-            t_c, alpha, p, tiers, cuts, batch=batch, overlap=overlap
+            t_c, alpha, p, tiers, cuts, batch=batch, overlap=overlap,
+            occupancy=occupancy,
         )
         if c < best_cost:
             best_cost, best_cuts = c, cuts
@@ -175,6 +179,7 @@ def solve_multitier(
     batch: int | None = None,
     *,
     overlap: bool = False,
+    occupancy: float | None = None,
 ) -> MultiTierPlan:
     """``batch=None`` is the paper's ideal per-sample model: every layer's
     cost is weighted by the probability the sample still runs it.
@@ -199,6 +204,14 @@ def solve_multitier(
     the serial sum — see the module docstring.  Like the bucketed case it
     enumerates cut vectors; above the cap the serial DP's cuts are kept and
     re-scored under overlap (a documented approximation).
+
+    ``occupancy`` (continuous batching; requires ``batch``) scales the
+    expected live width: only that fraction of the nominal batch holds a
+    live request in steady state, so downstream survivor sub-batches and
+    hop payloads shrink by it.  The entry tier still computes the full
+    nominal batch (dead slots are masked, not skipped — exactly the
+    runtime's behavior), which is what moves the optimal cut toward the
+    entry tier as occupancy drops.
     """
     t_c = np.asarray(t_c, float)
     alpha = np.asarray(alpha, float)
@@ -206,9 +219,13 @@ def solve_multitier(
     n = len(t_c) - 1
     k = len(tiers)
     assert k >= 1
+    if occupancy is not None and batch is None:
+        raise ValueError("occupancy models the batched runtime; pass batch=")
 
     if batch is not None or overlap:
-        plan = _solve_enumerated(t_c, alpha, p, tiers, batch, overlap)
+        plan = _solve_enumerated(
+            t_c, alpha, p, tiers, batch, overlap, occupancy
+        )
         if plan is not None:
             return plan
     if overlap:
@@ -219,17 +236,18 @@ def solve_multitier(
             plan,
             expected_time_s=expected_time_multitier(
                 t_c, alpha, p, tiers, plan.cut_after, batch=batch,
-                overlap=True,
+                overlap=True, occupancy=occupancy,
             ),
         )
 
     surv = np.cumprod(1.0 - p)  # surv[i] = alive after layer i's branch
     reach = np.concatenate([[1.0], surv[:-1]])  # alive entering layer i
+    occ = 1.0 if occupancy is None else float(occupancy)
 
     def stay_w(i: int, j: int) -> float:
         if batch is None:
             return reach[i]
-        return 1.0 if j == 0 else _padded_frac(reach[i], batch)
+        return 1.0 if j == 0 else _padded_frac(reach[i] * occ, batch)
 
     # Branch semantics (paper Sec. IV-B): side branches run on every tier
     # EXCEPT the last (the cloud evaluates none), and the branch sitting
@@ -245,7 +263,7 @@ def solve_multitier(
     dist[0][0] = 0.0
     for j in range(1, last):
         cand = dist[0][j - 1] + _hop_seconds(
-            alpha[0] * 8.0, tiers[j - 1].uplink_bps
+            occ * alpha[0] * 8.0, tiers[j - 1].uplink_bps
         )
         if cand < dist[0][j]:
             dist[0][j] = cand
@@ -258,7 +276,7 @@ def solve_multitier(
                 parent[i][j] = (i - 1, j)
         for j in range(1, last):
             cand = dist[i][j - 1] + _hop_seconds(
-                reach[i] * alpha[i] * 8.0, tiers[j - 1].uplink_bps
+                occ * reach[i] * alpha[i] * 8.0, tiers[j - 1].uplink_bps
             )
             if cand < dist[i][j]:
                 dist[i][j] = cand
@@ -274,9 +292,15 @@ def solve_multitier(
                 best_cost, best_i, end_on_last = float(dist[n][j]), n, False
                 best_j_final = j
         for i in range(0, n + 1):
-            tail_w = reach[i] if batch is None else _padded_frac(reach[i], batch)
+            tail_w = (
+                reach[i] if batch is None
+                else _padded_frac(reach[i] * occ, batch)
+            )
             hop = dist[i][last - 1] + (
-                _hop_seconds(reach[i] * alpha[i] * 8.0, tiers[last - 1].uplink_bps)
+                _hop_seconds(
+                    occ * reach[i] * alpha[i] * 8.0,
+                    tiers[last - 1].uplink_bps,
+                )
                 + tail_w * tiers[last].gamma * tail[i]
             )
             if hop < best_cost:
@@ -323,6 +347,7 @@ def expected_time_multitier(
     batch: int | None = None,
     *,
     overlap: bool = False,
+    occupancy: float | None = None,
 ) -> float:
     """Closed-form E[T] of one *fixed* monotone cut vector (the plan the
     runtime executes), same semantics as :func:`solve_multitier`: branches
@@ -343,6 +368,15 @@ def expected_time_multitier(
     compute concurrently; the single-host simulator serializes tier
     computes, so it matches this cost only when transfers dominate (see
     the ``serving.tiers`` module docstring).
+
+    ``occupancy`` (requires ``batch``): the continuous-batching scheduler
+    keeps only this fraction of the nominal batch live in steady state.
+    The entry tier still computes the full nominal batch (dead slots are
+    masked in place, exactly like intra-tier exits), while downstream
+    survivor sub-batches — and every hop's payload — scale with the
+    *live* width ``occupancy * batch`` before bucket padding.  This is
+    the occupancy-weighted expected-batch term ``est_latency_s`` and the
+    :class:`~repro.serving.controller.RepartitionController` price.
     """
     t_c = np.asarray(t_c, float)
     alpha = np.asarray(alpha, float)
@@ -354,9 +388,17 @@ def expected_time_multitier(
     bounds = (0, *(int(c) for c in cuts), n)
     if any(b > a for a, b in zip(bounds[1:], bounds[:-1])):
         raise ValueError(f"cuts must be non-decreasing in [0, {n}]: {cuts}")
+    if occupancy is not None:
+        if batch is None:
+            raise ValueError(
+                "occupancy models the batched runtime; pass batch="
+            )
+        if not 0.0 < occupancy <= 1.0:
+            raise ValueError(f"occupancy must be in (0, 1]: {occupancy}")
 
     surv = np.cumprod(1.0 - p)
     reach = np.concatenate([[1.0], surv[:-1]])
+    occ = 1.0 if occupancy is None else float(occupancy)
     entry = next((j for j in range(k) if bounds[j] < bounds[j + 1]), None)
     compute = [0.0] * k  # per-tier compute stage
     xfer = [0.0] * max(k - 1, 0)  # per-hop transfer stage
@@ -366,13 +408,13 @@ def expected_time_multitier(
             if batch is None:
                 w = reach[bounds[k - 1]] if (j == k - 1 and k > 1) else reach[i]
             else:
-                w = 1.0 if j == entry else _padded_frac(reach[lo], batch)
+                w = 1.0 if j == entry else _padded_frac(reach[lo] * occ, batch)
             compute[j] += w * tiers[j].gamma * t_c[i]
     for j in range(k - 1):
         c = bounds[j + 1]
         if c < n:  # layers still run downstream -> the hop really happens
             xfer[j] = _hop_seconds(
-                reach[c] * alpha[c] * 8.0, tiers[j].uplink_bps
+                occ * reach[c] * alpha[c] * 8.0, tiers[j].uplink_bps
             )
     if overlap:
         return float(max(compute + xfer))

@@ -10,6 +10,14 @@ The paper measures ``t_i^c`` on Google Colab (K80) and sets
     This is the deployable path — no hardware in the loop (DESIGN.md Sec. 7).
 
 Both return a :class:`repro.core.types.CostProfile`-ready pair of arrays.
+
+:func:`profile_decode_layers` builds the serving-relevant inputs for
+either source directly from a BranchyNet trunk: one decode-step callable
+per trunk layer (its residual update *including* the resident-cache
+read/write), dispatched through the same ``use_kernels`` tri-state as the
+tier runtime — so ``compute_j`` can come from the Pallas kernel lowering
+(interpret mode off-TPU) instead of only the jnp path, and the cost model
+prices what the runtime actually executes.
 """
 
 from __future__ import annotations
@@ -27,8 +35,10 @@ __all__ = [
     "TPU_V5E",
     "LayerCost",
     "analyze_layer_costs",
+    "decode_layer_fns",
     "measure_layer_times",
     "output_bytes",
+    "profile_decode_layers",
 ]
 
 
@@ -129,3 +139,99 @@ def measure_layer_times(
         ob = output_bytes(jax.eval_shape(fn, args))
         out.append(LayerCost(name, 0.0, 0.0, ob, dt))
     return out
+
+
+# ------------------------------------------------- serving decode profiles
+def decode_layer_fns(
+    cfg,
+    params,
+    batch: int,
+    context_len: int,
+    *,
+    use_kernels: bool | None = None,
+    pos: int | None = None,
+) -> tuple[list[tuple[str, Callable]], list]:
+    """Per-trunk-layer decode-step callables + their input pytrees.
+
+    Layer ``i``'s callable maps ``(h (B, 1, d), caches)`` to the residual
+    stream after layer ``i`` — including the layer's resident-cache
+    read/write — through :func:`repro.models.model.run_trunk` with the
+    SAME ``use_kernels`` dispatch the tier runtime uses (None = the
+    config's tri-state: auto on TPU; True off-TPU runs the Pallas kernels
+    in interpret mode).  Feed the pairs to :func:`analyze_layer_costs`
+    (inputs become ShapeDtypeStructs automatically) or
+    :func:`measure_layer_times` via :func:`profile_decode_layers`.
+
+    ``output_bytes`` of each callable is the residual stream — the
+    paper's per-layer ``alpha_i`` — because the cache stays resident and
+    never crosses a cut.
+    """
+    # Deferred: core.profiler is imported by repro.core.__init__, and the
+    # model stack imports repro.core submodules.
+    from repro.kernels.ops import resolve_use_kernels
+    from repro.models import model as M
+
+    kernels = resolve_use_kernels(
+        cfg.use_kernels if use_kernels is None else use_kernels
+    )
+    total = sum(n for _, _, n in M.trunk_layout(cfg))
+    dtype = M.compute_dtype(cfg)
+    # Mid-context query position: the cache is charged at its full
+    # resident size either way (static shapes), the position only gates
+    # the validity mask.
+    positions = jnp.full((1,), pos if pos is not None else context_len // 2,
+                         jnp.int32)
+
+    def make_fn(i: int) -> Callable:
+        def fn(args):
+            h, caches = args
+            h2, _, _, _ = M.run_trunk(
+                params, h, cfg, positions, caches,
+                layer_range=(i, i + 1), use_kernels=kernels,
+            )
+            return h2
+
+        return fn
+
+    fns = [(f"layer{i + 1}", make_fn(i)) for i in range(total)]
+    h0 = jnp.zeros((batch, 1, cfg.d_model), dtype)
+    caches = M.init_caches(cfg, batch, context_len)
+    inputs = [(h0, caches)] * total
+    return fns, inputs
+
+
+def profile_decode_layers(
+    cfg,
+    params,
+    batch: int,
+    context_len: int,
+    *,
+    use_kernels: bool | None = None,
+    mode: str = "analyze",
+    hardware: HardwareSpec = TPU_V5E,
+    iters: int = 10,
+    warmup: int = 2,
+) -> list[LayerCost]:
+    """Per-layer decode-step costs of a BranchyNet trunk, kernel-aware.
+
+    ``mode="analyze"`` rooflines each layer's compiled HLO (no device
+    work beyond compilation); ``mode="measure"`` wall-clocks it.  Either
+    way the lowered program is the tier runtime's own decode math —
+    ``use_kernels=True`` prices the Pallas kernel lowering, ``False`` the
+    jnp lowering, ``None`` the config/backend default — so the resulting
+    ``t_c`` feeds :class:`~repro.core.types.CostProfile` with
+    runtime-faithful ``compute_j`` terms."""
+    if mode not in ("analyze", "measure"):
+        raise ValueError(f"unknown profiling mode: {mode!r}")
+    fns, inputs = decode_layer_fns(
+        cfg, params, batch, context_len, use_kernels=use_kernels
+    )
+    if mode == "analyze":
+        abstract = [
+            jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args
+            )
+            for args in inputs
+        ]
+        return analyze_layer_costs(fns, abstract, hardware)
+    return measure_layer_times(fns, inputs, iters=iters, warmup=warmup)

@@ -40,7 +40,7 @@ NEG_INF = -1e30
 
 def _kernel(
     rows_ref,  # (B,) SMEM scalar-prefetch: query row -> cache row
-    qpos_ref,  # (1,) SMEM scalar-prefetch: query position
+    qpos_ref,  # (B,) SMEM scalar-prefetch: per-query-row position
     q_ref,  # (1, 1, G, D)
     k_ref,  # (1, block_c, 1, D)
     v_ref,  # (1, block_c, 1, D)
@@ -66,7 +66,7 @@ def _kernel(
     k = k_ref[0, :, 0].astype(jnp.float32)  # (bc, D)
     v = v_ref[0, :, 0].astype(jnp.float32)  # (bc, D)
     kpos = pos_ref[0, :]  # (bc,)
-    qpos = qpos_ref[0]
+    qpos = qpos_ref[pl.program_id(0)]
 
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -101,7 +101,7 @@ def flash_decode_pallas(
     k: jax.Array,  # (Bc, C, K, D)
     v: jax.Array,  # (Bc, C, K, D)
     k_pos: jax.Array,  # (C,) shared or (Bc, C) per-sequence, int32
-    q_pos: jax.Array,  # () int32
+    q_pos: jax.Array,  # () shared or (B,) per-query-row, int32
     rows: jax.Array | None = None,  # (B,) int32 query row -> cache row
     *,
     window: int = 0,
@@ -127,7 +127,9 @@ def flash_decode_pallas(
     nc = cc // block_c
 
     qg = q.reshape(b, kh, g, d)
-    qpos = q_pos.astype(jnp.int32).reshape(1)
+    # Per-row query positions (continuous batching) ride the same
+    # scalar-prefetch path; a shared scalar broadcasts to every row.
+    qpos = jnp.broadcast_to(q_pos.astype(jnp.int32), (b,))
     rows = rows.astype(jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

@@ -51,13 +51,14 @@ def flash_decode_ref(
     k: jax.Array,  # (Bc, C, K, D)
     v: jax.Array,  # (Bc, C, K, D)
     k_pos: jax.Array,  # (C,) shared or (Bc, C) per-sequence, -1 = empty slot
-    q_pos: jax.Array,  # () int32
+    q_pos: jax.Array,  # () shared or (B,) per-query-row, int32
     rows: jax.Array | None = None,  # (B,) int32: query row -> cache row
     window: int = 0,
 ) -> jax.Array:
     """Single-token GQA decode attention with (per-sequence) slot validity,
-    optional sliding window, and an optional survivor row map into a larger
-    resident cache.  Returns (B, H, D) in q.dtype."""
+    optional sliding window, an optional survivor row map into a larger
+    resident cache, and (continuous batching) per-query-row positions.
+    Returns (B, H, D) in q.dtype."""
     b, h, d = q.shape
     if rows is not None:
         k, v = k[rows], v[rows]
@@ -65,12 +66,15 @@ def flash_decode_ref(
             k_pos = k_pos[rows]
     kh = k.shape[2]
     g = h // kh
+    q_pos = jnp.broadcast_to(q_pos, (b,))[:, None]  # (B, 1) vs k_pos's (.., C)
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None, :]
     qf = q.reshape(b, kh, g, d).astype(jnp.float32) / np.sqrt(d)
     s = jnp.einsum("bkgd,bckd->bkgc", qf, k.astype(jnp.float32))
     valid = (k_pos >= 0) & (k_pos <= q_pos)
     if window > 0:
         valid &= q_pos - k_pos < window
-    valid = valid[:, None, None, :] if valid.ndim == 2 else valid[None, None, None, :]
+    valid = valid[:, None, None, :]
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))

@@ -247,7 +247,11 @@ def init_kv_cache(
 
 
 def _cache_write(
-    cache: Params, k_new: jax.Array, v_new: jax.Array, rows: jax.Array | None = None
+    cache: Params,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    rows: jax.Array | None = None,
+    positions: jax.Array | None = None,
 ) -> Params:
     """Write one decode step (Sq == 1) into the (ring) cache.
 
@@ -255,8 +259,26 @@ def _cache_write(
     ``rows`` (Bsub,) writes only those rows of the full-batch cache — the
     survivor-compacted path — leaving excluded rows' slots untouched (their
     per-sequence ``pos`` stays -1, so attention masks the hole).
+
+    ``positions`` with a batch dim ((B|Bsub, 1), the continuous-batching
+    runtime) makes the write *per sequence*: row i writes its own ring slot
+    ``positions[i] % C`` and records its own absolute position — requests
+    admitted at different times coexist in one cache.  A 1-D ``positions``
+    (or None) keeps the historical lock-step write at ``length % C``.
     """
     c = cache["k"].shape[1]
+    if positions is not None and positions.ndim == 2:
+        pos_vec = positions[:, 0].astype(jnp.int32)
+        idx = pos_vec % c
+        br = (
+            rows
+            if rows is not None
+            else jnp.arange(k_new.shape[0], dtype=jnp.int32)
+        )
+        k = cache["k"].at[br, idx].set(k_new[:, 0], mode="drop")
+        v = cache["v"].at[br, idx].set(v_new[:, 0], mode="drop")
+        pos = cache["pos"].at[br, idx].set(pos_vec, mode="drop")
+        return {"k": k, "v": v, "pos": pos, "length": cache["length"] + 1}
     idx = cache["length"] % c
     if rows is None:
         k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, idx, axis=1)
@@ -306,6 +328,28 @@ def _cache_prefill(cache: Params, k: jax.Array, v: jax.Array) -> Params:
     }
 
 
+def _cache_prefill_rows(
+    cache: Params, k: jax.Array, v: jax.Array, rows: jax.Array
+) -> Params:
+    """Row-targeted prompt prefill: write rows ``rows`` of the resident
+    full-batch cache as if each were a *freshly initialized* cache that
+    just prefilled this prompt — slots past the prompt reset to empty
+    (pos = -1), so no stale K/V from the row's previous occupant can ever
+    look valid.  Other rows (and the resident step counter) are untouched;
+    OOB sentinel rows (admission-group padding) drop their writes."""
+    fresh = _cache_prefill(
+        init_kv_cache(k.shape[0], cache["k"].shape[1], k.shape[2], k.shape[3],
+                      cache["k"].dtype),
+        k, v,
+    )
+    return {
+        "k": cache["k"].at[rows].set(fresh["k"], mode="drop"),
+        "v": cache["v"].at[rows].set(fresh["v"], mode="drop"),
+        "pos": cache["pos"].at[rows].set(fresh["pos"], mode="drop"),
+        "length": cache["length"],
+    }
+
+
 # ============================================================== standard GQA
 def attn_init(key, cfg: ModelConfig) -> Params:
     ks = jax.random.split(key, 6)
@@ -339,8 +383,14 @@ def attn_apply(
     cache given -> single-step decode against the cache.  ``kv_override``
     supplies precomputed encoder K/V for cross-attention (no cache write).
 
-    ``rows`` (decode only): x is a compacted survivor sub-batch; row ``i``
-    of x reads/writes row ``rows[i]`` of the full-batch cache.
+    ``rows``: x is a compacted survivor sub-batch (decode) or a block of
+    newly admitted prompts (prefill, s > 1); row ``i`` of x reads/writes
+    row ``rows[i]`` of the full-batch cache.
+
+    ``positions`` may be per sequence at decode time — (B, 1) instead of
+    the shared (1,) — so requests admitted at different steps decode at
+    their own absolute positions (continuous batching): RoPE, the banded
+    mask and the ring-slot write all follow the row's own position.
 
     ``use_kernels`` (decode only): the single-token attention runs in the
     Pallas flash_decode kernel, which streams the survivor rows straight
@@ -376,14 +426,20 @@ def attn_apply(
     if cache is not None and s > 1:
         # -------- prefill with cache write-through: full-sequence attention
         # plus populating the (ring) cache for subsequent decode steps.
-        assert rows is None, "rows is a decode-only (compacted) argument"
-        new_cache = _cache_prefill(cache, k, v)
+        # ``rows`` targets the write at those rows of the resident
+        # full-batch cache (continuous-batching admission); the prompt's
+        # attention itself never reads the cache, so it is identical to a
+        # fresh solo prefill by construction.
+        new_cache = (
+            _cache_prefill(cache, k, v) if rows is None
+            else _cache_prefill_rows(cache, k, v, rows)
+        )
         out = flash_attention(
             qg, k, v, positions, positions, window=window, block_k=min(1024, s)
         )
     elif cache is not None:
         # -------- decode: write this step, attend over the whole cache.
-        cache = _cache_write(cache, k, v, rows)
+        cache = _cache_write(cache, k, v, rows, positions)
         if cfg.decode_qhd_shard:
             # Run attention in the cache's head-dim-sharded layout: scores
             # become partial sums (all-reduce) instead of resharding the
@@ -393,9 +449,12 @@ def attn_apply(
             # Pallas flash_decode: the survivor row map is a scalar-prefetch
             # operand, so the kernel DMAs only rows ``rows`` of the resident
             # cache — the compacted sub-batch attends in place, no gather.
+            # Per-sequence query positions ((B, 1), continuous batching)
+            # ride the same scalar-prefetch path as a (B,) vector.
+            q_pos = positions[:, 0] if positions.ndim == 2 else positions[0]
             out = kernel_ops.flash_decode(
                 qg.reshape(b, kh * g, hd),
-                cache["k"], cache["v"], cache["pos"], positions[0],
+                cache["k"], cache["v"], cache["pos"], q_pos,
                 rows, window=window,
             ).reshape(b, 1, kh, g, hd)
         else:
@@ -465,6 +524,65 @@ def init_mla_cache(batch: int, capacity: int, cfg: ModelConfig, dtype=jnp.bfloat
     }
 
 
+def _mla_prefill_cache(
+    cache: Params, ckv: jax.Array, k_rope: jax.Array
+) -> Params:
+    """Prefill write-through of the MLA latent cache (ring invariant)."""
+    b, s, _ = ckv.shape
+    cap = cache["ckv"].shape[1]
+    if s >= cap:
+        shift = s % cap
+        return {
+            "ckv": jnp.roll(ckv[:, s - cap :], shift, axis=1).astype(
+                cache["ckv"].dtype
+            ),
+            "k_rope": jnp.roll(k_rope[:, s - cap :], shift, axis=1).astype(
+                cache["k_rope"].dtype
+            ),
+            "pos": jnp.roll(
+                jnp.broadcast_to(
+                    jnp.arange(s - cap, s, dtype=jnp.int32), (b, cap)
+                ),
+                shift,
+                axis=1,
+            ),
+            "length": jnp.asarray(s, jnp.int32),
+        }
+    return {
+        "ckv": jnp.concatenate([ckv, cache["ckv"][:, s:]], 1).astype(
+            cache["ckv"].dtype
+        ),
+        "k_rope": jnp.concatenate([k_rope, cache["k_rope"][:, s:]], 1).astype(
+            cache["k_rope"].dtype
+        ),
+        "pos": jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)),
+             cache["pos"][:, s:]],
+            1,
+        ),
+        "length": jnp.asarray(s, jnp.int32),
+    }
+
+
+def _mla_prefill_rows(
+    cache: Params, ckv: jax.Array, k_rope: jax.Array, rows: jax.Array, cfg
+) -> Params:
+    """Row-targeted MLA prompt prefill (see :func:`_cache_prefill_rows`):
+    each target row ends exactly as a fresh solo prefill — tail slots reset
+    to empty — and the resident step counter is untouched."""
+    fresh = _mla_prefill_cache(
+        init_mla_cache(ckv.shape[0], cache["ckv"].shape[1], cfg,
+                       cache["ckv"].dtype),
+        ckv, k_rope,
+    )
+    return {
+        "ckv": cache["ckv"].at[rows].set(fresh["ckv"], mode="drop"),
+        "k_rope": cache["k_rope"].at[rows].set(fresh["k_rope"], mode="drop"),
+        "pos": cache["pos"].at[rows].set(fresh["pos"], mode="drop"),
+        "length": cache["length"],
+    }
+
+
 def _mla_qkr(params, x, cfg, positions):
     """Shared query path: returns (q_nope, q_rope) with RoPE applied."""
     b, s, _ = x.shape
@@ -483,7 +601,8 @@ def mla_apply(
     cfg: ModelConfig,
     positions: jax.Array,
     cache: Params | None = None,
-    rows: jax.Array | None = None,  # (Bsub,) survivor rows (decode only)
+    rows: jax.Array | None = None,  # (Bsub,) cache rows: decode survivors,
+    #                                 or admission targets at prefill (s > 1)
 ) -> tuple[jax.Array, Params | None]:
     b, s, d = x.shape
     h, hd, r_rope = cfg.num_heads, cfg.head_dim, cfg.mla_rope_dim
@@ -518,40 +637,25 @@ def mla_apply(
         ).reshape(b, s, h, hd)
         new_cache = None
         if cache is not None:
-            # Prefill write-through of the latent cache (ring invariant).
-            assert rows is None, "rows is a decode-only (compacted) argument"
-            cap = cache["ckv"].shape[1]
-            if s >= cap:
-                shift = s % cap
-                new_cache = {
-                    "ckv": jnp.roll(ckv[:, s - cap :], shift, axis=1),
-                    "k_rope": jnp.roll(k_rope[:, s - cap :], shift, axis=1),
-                    "pos": jnp.roll(
-                        jnp.broadcast_to(
-                            jnp.arange(s - cap, s, dtype=jnp.int32), (b, cap)
-                        ),
-                        shift,
-                        axis=1,
-                    ),
-                    "length": jnp.asarray(s, jnp.int32),
-                }
-            else:
-                new_cache = {
-                    "ckv": jnp.concatenate([ckv, cache["ckv"][:, s:]], 1),
-                    "k_rope": jnp.concatenate([k_rope, cache["k_rope"][:, s:]], 1),
-                    "pos": jnp.concatenate(
-                        [jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)),
-                         cache["pos"][:, s:]],
-                        1,
-                    ),
-                    "length": jnp.asarray(s, jnp.int32),
-                }
+            # Prefill write-through of the latent cache (ring invariant);
+            # ``rows`` targets admitted rows of the resident cache.
+            new_cache = (
+                _mla_prefill_cache(cache, ckv, k_rope) if rows is None
+                else _mla_prefill_rows(cache, ckv, k_rope, rows, cfg)
+            )
     else:
         # Absorbed decode: score and read directly in the latent space.
         assert s == 1
         c = cache["ckv"].shape[1]
-        idx = cache["length"] % c
-        if rows is None:
+        per_seq = positions.ndim == 2  # continuous batching: (B|Bsub, 1)
+        if per_seq:
+            pos_vec = positions[:, 0].astype(jnp.int32)
+            idx = pos_vec % c
+            pos_val = pos_vec
+        else:
+            idx = cache["length"] % c
+            pos_val = cache["length"]
+        if rows is None and not per_seq:
             cache = {
                 "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, idx, 1),
                 "k_rope": jax.lax.dynamic_update_slice_in_dim(
@@ -567,19 +671,23 @@ def mla_apply(
             }
             ckv_r, rope_r, pos_r = cache["ckv"], cache["k_rope"], cache["pos"]
         else:
+            br = rows if rows is not None else jnp.arange(b, dtype=jnp.int32)
             cache = {
-                "ckv": cache["ckv"].at[rows, idx].set(ckv[:, 0], mode="drop"),
-                "k_rope": cache["k_rope"].at[rows, idx].set(
+                "ckv": cache["ckv"].at[br, idx].set(ckv[:, 0], mode="drop"),
+                "k_rope": cache["k_rope"].at[br, idx].set(
                     k_rope[:, 0], mode="drop"
                 ),
-                "pos": cache["pos"].at[rows, idx].set(
-                    cache["length"], mode="drop"
-                ),
+                "pos": cache["pos"].at[br, idx].set(pos_val, mode="drop"),
                 "length": cache["length"] + 1,
             }
-            ckv_r = cache["ckv"][rows]
-            rope_r = cache["k_rope"][rows]
-            pos_r = cache["pos"][rows]
+            if rows is None:
+                ckv_r, rope_r, pos_r = (
+                    cache["ckv"], cache["k_rope"], cache["pos"]
+                )
+            else:
+                ckv_r = cache["ckv"][rows]
+                rope_r = cache["k_rope"][rows]
+                pos_r = cache["pos"][rows]
         wk_b = params["wk_b"].astype(dtype).reshape(r_kv, h, hd)
         # Absorb W_uk into q: (B,1,H,hd) x (r,H,hd) -> (B,1,H,r)
         q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk_b)

@@ -185,6 +185,10 @@ def mamba_apply(
 
     ``rows``: x is a compacted survivor sub-batch; row ``i`` updates row
     ``rows[i]`` of the full-batch recurrent state (other rows untouched).
+    With ``s > 1`` (continuous-batching admission) x is a block of newly
+    admitted prompts: the scan starts from a *fresh zero* state — exactly
+    a solo prefill — and the resulting conv window / SSM state scatter
+    into rows ``rows`` of the resident state in place.
 
     ``use_kernels`` (decode only): the recurrent step runs in the Pallas
     ssd_update kernel, which reads the survivor rows of the full-batch
@@ -196,8 +200,9 @@ def mamba_apply(
     w = cfg.ssm_conv_width
 
     full_state = state
-    if rows is not None:
-        assert state is not None and s == 1, "rows is a decode-only argument"
+    prefill_rows = rows is not None and s > 1
+    if rows is not None and not prefill_rows:
+        assert state is not None, "rows needs a resident state"
         state = {
             "conv": state["conv"][rows],
             # The kernel path reads its rows of the resident state in
@@ -205,6 +210,12 @@ def mamba_apply(
             "ssm": state["ssm"] if use_kernels else state["ssm"][rows],
             "length": state["length"],
         }
+    elif prefill_rows:
+        # Row-targeted prompt prefill: the admitted rows' recurrence starts
+        # from a fresh zero state (solo-prefill semantics); the final state
+        # scatters into the resident rows below.
+        assert state is not None, "rows needs a resident state"
+        state = None
 
     z = dense(params["w_z"], x, dtype)
     xbc = dense(params["w_xbc"], x, dtype)
@@ -212,7 +223,7 @@ def mamba_apply(
     raw_xbc = xbc  # pre-conv inputs, needed to seed the decode conv window
 
     new_state = None
-    if state is not None and s > 1:
+    if (state is not None or prefill_rows) and s > 1:
         # Prefill with state write-through.
         return_state = True
     if state is None or s > 1:
@@ -252,12 +263,27 @@ def mamba_apply(
             conv_tail = jnp.pad(
                 raw_xbc, ((0, 0), (max(0, (w - 1) - s), 0), (0, 0))
             )[:, -(w - 1) :, :]
-            prev = state["length"] if state is not None else jnp.asarray(0, jnp.int32)
-            new_state = {
-                "conv": conv_tail,
-                "ssm": h_last,
-                "length": prev + s,
-            }
+            if prefill_rows:
+                # Scatter the admitted rows into the resident state; the
+                # resident step counter is untouched (mode="drop" skips
+                # admission-group padding rows' OOB sentinels).
+                new_state = {
+                    "conv": full_state["conv"].at[rows].set(
+                        conv_tail.astype(full_state["conv"].dtype), mode="drop"
+                    ),
+                    "ssm": full_state["ssm"].at[rows].set(h_last, mode="drop"),
+                    "length": full_state["length"],
+                }
+            else:
+                prev = (
+                    state["length"] if state is not None
+                    else jnp.asarray(0, jnp.int32)
+                )
+                new_state = {
+                    "conv": conv_tail,
+                    "ssm": h_last,
+                    "length": prev + s,
+                }
     else:
         if use_kernels:
             # Pallas single-step SSD update; with ``rows`` the full

@@ -198,7 +198,8 @@ def run_trunk(
     collect: tuple[int, ...] = (),  # 1-based "after layer i" collection points
     remat: bool = False,
     moe_dispatch: str = "einsum",
-    rows: jax.Array | None = None,  # (Bsub,) survivor rows (compacted decode)
+    rows: jax.Array | None = None,  # (Bsub,) cache rows: compacted decode
+    #                                 survivors, or admission-prefill targets
     use_kernels: bool = False,  # decode: Pallas flash_decode / ssd_update
 ) -> tuple[jax.Array, Params | None, jax.Array, dict[int, jax.Array]]:
     """Run trunk layers [lo, hi), segmenting at collect points and (hybrid)
@@ -493,6 +494,7 @@ def prefill(
     caches: Params,
     *,
     moe_dispatch: str = "einsum",
+    rows: jax.Array | None = None,
 ) -> tuple[jax.Array, Params]:
     """Process the full prompt; returns (last-position logits, caches).
 
@@ -500,16 +502,28 @@ def prefill(
     writes K/V into the cache tensors; SSM states come from the chunked
     scan's final state.  For the dry-run's prefill shape we lower exactly
     this function.
+
+    ``rows`` (continuous-batching admission): ``inputs`` is a block of
+    newly admitted prompts and ``caches`` the *resident full-batch* caches
+    — prompt row ``i`` prefills into cache row ``rows[i]`` in place, ending
+    exactly as a fresh solo prefill of that prompt (stale slots from the
+    row's previous occupant reset to empty).  Other rows and the resident
+    step counter are untouched; OOB sentinel rows drop their writes.
     """
+    if rows is not None and cfg.arch_type == "audio":
+        raise NotImplementedError(
+            "row-targeted prefill does not cover encoder cross-KV caches"
+        )
     h, positions = _embed_inputs(params, inputs, cfg)
     if cfg.arch_type == "audio":
         enc_out = encode_audio(params, inputs["frame_embeds"], cfg)
         caches = dict(caches)
         caches["cross_kv"] = compute_cross_kv(params, enc_out, cfg)
     h2, new_caches, _, _ = run_trunk(
-        params, h, cfg, positions, caches, moe_dispatch=moe_dispatch
+        params, h, cfg, positions, caches, moe_dispatch=moe_dispatch,
+        rows=rows,
     )
-    if new_caches is not None:
+    if new_caches is not None and rows is None:
         new_caches["length"] = jnp.asarray(h.shape[1], jnp.int32)
     hF = norm_apply(cfg.norm_type, params["final_norm"], h2)
     logits = constrain(_unembed(params, hF[:, -1:], cfg), "b.v")
@@ -520,12 +534,15 @@ def embed_decode(
     params: Params, token: jax.Array, positions: jax.Array, cfg: ModelConfig
 ) -> jax.Array:
     """Embed one decode-step token (B, 1) — the entry point of whichever
-    tier holds trunk layer 1 in a partitioned deployment."""
+    tier holds trunk layer 1 in a partitioned deployment.  ``positions``
+    is the shared (1,) step position, or (B, 1) per-sequence positions
+    under continuous batching."""
     dtype = compute_dtype(cfg)
     h = embed(params["embed"], token, dtype)
     if cfg.arch_type == "audio":
         # RoPE-free decoder: add the absolute sinusoidal embedding at `pos`.
-        h = h + sinusoidal_embed(positions, cfg.d_model).astype(dtype)[None]
+        emb = sinusoidal_embed(positions, cfg.d_model).astype(dtype)
+        h = h + (emb if positions.ndim == 2 else emb[None])
     return h
 
 

@@ -5,12 +5,20 @@
     PartitionedServer            K=2 (the paper's edge/cloud system)
     MultiTierServer              K>=3 (lattice plans from core.multitier)
     RepartitionController        live p_k -> solver -> hot swap
+    RequestScheduler             continuous-batching request lifecycle
+                                 (submit/run/drain over recycled KV slots)
 """
 
 from repro.serving.controller import RepartitionController
 from repro.serving.engine import ExitStats, ServingEngine
 from repro.serving.multitier import MultiTierServer, MultiTierStepReport
 from repro.serving.partitioned import PartitionedServer, StepReport
+from repro.serving.scheduler import (
+    Request,
+    RequestResult,
+    RequestScheduler,
+    SchedulerStepReport,
+)
 from repro.serving.tiers import (
     HopCompaction,
     TierExecutor,
@@ -28,6 +36,10 @@ __all__ = [
     "MultiTierServer",
     "MultiTierStepReport",
     "RepartitionController",
+    "Request",
+    "RequestResult",
+    "RequestScheduler",
+    "SchedulerStepReport",
     "HopCompaction",
     "TierExecutor",
     "TierSegment",

@@ -28,6 +28,15 @@ padding waste.  A server running
 ``overlap="pipelined"`` is re-solved against the pipeline-bottleneck
 steady-state cost (``overlap=True`` in core.multitier) — the optimal cut
 generally moves when transfers overlap compute.
+
+Continuous batching: step reports carry the live width and the dead-slot
+mask, so observe() (wired as a ``RequestScheduler.on_step`` callback)
+counts arrivals over live rows only and feeds a decaying occupancy
+estimate into batched solves (``occupancy=`` in core.multitier) — the
+controller prices the steady-state live batch, not the nominal one.
+``probe_sample_frac`` makes epsilon probes evaluate the extra branch
+heads on a sampled sub-batch; the executor reports which rows were
+covered and the window stays unbiased.
 """
 
 from __future__ import annotations
@@ -89,6 +98,16 @@ class RepartitionController:
     # measured probabilities instead of carrying the installed estimate.
     # 0 disables exploration.
     explore_every_n: int = 0
+    # Fraction of the batch a probe step evaluates the extra branch heads
+    # on (1.0 = every row).  Sampled probes price exploration at a
+    # sub-batch of branch-head FLOPs; the executor reports which rows were
+    # covered and observe() counts arrivals over those rows only, so the
+    # conditional estimates stay unbiased.
+    probe_sample_frac: float = 1.0
+    # Steady-state occupancy override for continuous-batching servers
+    # (None = track the live width from observed step reports).  Solves
+    # price the occupancy-weighted expected batch, not the nominal one.
+    occupancy: float | None = None
 
     def __post_init__(self):
         if isinstance(self.server, MultiTierServer) and self.tiers is None:
@@ -107,20 +126,40 @@ class RepartitionController:
         self._steps_observed = 0
         self._window_age = 0
         self._installed_p: np.ndarray | None = None
+        if not 0.0 < self.probe_sample_frac <= 1.0:
+            raise ValueError(
+                f"probe_sample_frac must be in (0, 1]: {self.probe_sample_frac}"
+            )
+        # Decaying estimate of the live fraction (continuous batching);
+        # lock-step reports keep it at 1.
+        self._occ_est: float | None = None
 
     # ------------------------------------------------------------ solving
+    def _solve_occupancy(self) -> float | None:
+        """The live-width fraction batched solves should price: the
+        explicit ``occupancy`` override, else the decaying estimate from
+        observed continuous-batching step reports, else None (nominal)."""
+        occ = self.occupancy if self.occupancy is not None else self._occ_est
+        if occ is None:
+            return None
+        return float(min(max(occ, 1e-6), 1.0))
+
     def solve(self, p_k: np.ndarray) -> tuple[int, ...]:
         """Optimal cut vector for the profile with live exit probs.  A
         server running ``overlap="pipelined"`` is solved against the
         pipeline-bottleneck steady-state cost (the optimal cut can move
-        under overlap), a serial server against the serial chain sum."""
+        under overlap), a serial server against the serial chain sum.
+        Batched solves price the occupancy-weighted steady-state live
+        width (see ``occupancy``)."""
         prof = Partitioner(self.profile).with_exit_probs(p_k).profile
         overlap = getattr(self.server, "overlap", "serial") == "pipelined"
+        occ = self._solve_occupancy()
         if isinstance(self.server, MultiTierServer):
             plan = solve_multitier(
                 prof.t_c, prof.alpha, prof.branch_exit_probs(), self.tiers,
                 batch=self.batch,
                 overlap=overlap,
+                occupancy=occ if self.batch is not None else None,
             )
             return plan.cut_after
         bucketed = (
@@ -143,6 +182,7 @@ class RepartitionController:
             plan = solve_multitier(
                 prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers,
                 batch=self.batch if bucketed else None, overlap=overlap,
+                occupancy=occ if bucketed else None,
             )
             return plan.cut_after
         return (Partitioner(prof).solve().split_layer,)
@@ -173,31 +213,59 @@ class RepartitionController:
         carrying ``branch_take`` + ``tokens``).  Every ``every_n_steps``
         observed steps, re-solve if the measured exit distribution drifted
         past ``kl_threshold``.  Returns the new cuts when a swap happened.
+
+        Continuous-batching reports carry ``active``/``live``: dead slots
+        never count as arrivals, and the live width feeds the decaying
+        occupancy estimate batched solves price.  Sampled probe reports
+        carry ``branch_probe_mask``: a probed branch's arrivals are
+        counted over its covered rows only, so sampling never reads an
+        unevaluated head as "arrived without exiting".  (When several
+        probed branches sit on different compacted segments their
+        coverage sets can differ; a row uncovered at an earlier branch
+        whose counterfactual exit is therefore unknown still counts at a
+        later branch it is covered on — a second-order conditioning
+        approximation that vanishes at ``probe_sample_frac=1``.)
         """
         batch = report.tokens.shape[0]
-        alive = np.ones((batch,), bool)
+        active = getattr(report, "active", None)
+        alive = (
+            np.ones((batch,), bool) if active is None
+            else np.asarray(active, bool).copy()
+        )
+        probe_cover = getattr(report, "branch_probe_mask", {}) or {}
         for j, layer in enumerate(self.server.cfg.branch_layers):
             take = report.branch_take.get(layer)
             if take is None:
                 continue  # branch not evaluated under this plan (nor probed)
-            self._arrivals[j] += float(alive.sum())
+            cover = probe_cover.get(layer)
+            counted = alive if cover is None else (alive & cover)
+            self._arrivals[j] += float(counted.sum())
             # Intersect with the running alive mask: on a probe step an
             # earlier (discarded) branch's would-exit rows have left
             # `alive`, but the executor computed this branch's take under
             # *plan* semantics, so the masks can overlap — counting the
             # overlap would push the conditional estimate past 1.
-            self._exits[j] += float((take & alive).sum())
+            self._exits[j] += float((take & counted).sum())
             alive &= ~take
+        live = getattr(report, "live", None)
+        if live:
+            occ = live / batch
+            self._occ_est = (
+                occ if self._occ_est is None
+                else 0.9 * self._occ_est + 0.1 * occ
+            )
         self._steps_observed += 1
         self._window_age += 1
         if (
             self.explore_every_n
             and self._steps_observed % self.explore_every_n == 0
         ):
-            # Epsilon step: the next decode step probes every branch head.
-            # Its report carries would-exit masks for the discarded
-            # branches too, which the loop above folds into the window.
+            # Epsilon step: the next decode step probes every branch head
+            # (on a probe_sample_frac sub-batch).  Its report carries
+            # would-exit masks for the discarded branches too, which the
+            # loop above folds into the window.
             self.server.executor.probe_next = True
+            self.server.executor.probe_sample_frac = self.probe_sample_frac
         if self._window_age >= self.window_steps:
             # Exponential decay: halve the window so the measured
             # distribution tracks regime changes in O(window_steps) steps

@@ -25,7 +25,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.calibration import calibrate_exit_probs
 from repro.models import model as M
-from repro.serving.tiers import TierExecutor, segments_for_cuts
+from repro.serving.scheduler import ServesRequests
+from repro.serving.tiers import TierExecutor, TierStepResult, segments_for_cuts
 
 __all__ = ["ServingEngine", "ExitStats"]
 
@@ -60,13 +61,15 @@ class ExitStats:
 
 
 @dataclasses.dataclass
-class ServingEngine:
+class ServingEngine(ServesRequests):
     cfg: ModelConfig
     params: Any
     context_len: int = 4096
     # Decode hot path on the Pallas kernels; None = cfg.use_kernels
     # (still None = auto: kernels on TPU, jnp elsewhere).
     use_kernels: bool | None = None
+    # Request-scheduler KV slots for the submit()/run()/drain() API.
+    slots: int = 8
 
     def __post_init__(self):
         cfg = self.cfg
@@ -77,6 +80,18 @@ class ServingEngine:
             cfg, self.params, segments_for_cuts(cfg, ()),
             use_kernels=self.use_kernels,
         )
+
+    @property
+    def executor(self) -> TierExecutor:
+        return self._exec
+
+    def step(
+        self, tok: jax.Array, pos, caches: Any, *, active=None
+    ) -> tuple[TierStepResult, Any]:
+        """One fused decode step (the K=1 tier configuration); ``pos`` may
+        be per-sequence and ``active`` masks dead request slots — the
+        entry points the request scheduler drives."""
+        return self._exec.step(tok, pos, caches, active=active)
 
     def start(self, inputs: dict) -> dict:
         """Prefill a batch of prompts; returns mutable serve state."""

@@ -22,9 +22,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.multitier import MultiTierPlan, TierSpec, expected_time_multitier
+from repro.serving.scheduler import ServesRequests
 from repro.serving.tiers import (
     HopCompaction,
     TierExecutor,
+    TierStepResult,
     segments_for_cuts,
     transfer_seconds,
 )
@@ -47,10 +49,14 @@ class MultiTierStepReport:
     # Cumulative executor health counters (bucket-policy observability).
     overflow_retries: int = 0
     pipeline_fallbacks: int = 0
+    #: Live request slots this step decoded (== B under lock-step).
+    live: int = 0
+    #: The executor's raw result — what the request scheduler consumes.
+    tier_result: TierStepResult | None = None
 
 
 @dataclasses.dataclass
-class MultiTierServer:
+class MultiTierServer(ServesRequests):
     cfg: ModelConfig
     params: Any
     tiers: Sequence[TierSpec]
@@ -62,6 +68,8 @@ class MultiTierServer:
     use_kernels: bool | None = None  # Pallas decode path; None = cfg/auto
     hint_window: int = 8  # windowed-max bucket hints (1 = last step only)
     bucket_headroom: float = 0.0  # fractional bucket padding vs retries
+    slots: int = 8  # request-scheduler KV slots (submit/run/drain API)
+    context_len: int = 4096  # scheduler cache capacity per slot
 
     def __post_init__(self):
         self.tiers = tuple(self.tiers)
@@ -115,9 +123,9 @@ class MultiTierServer:
 
     # ------------------------------------------------------------------
     def step(
-        self, tok: jax.Array, pos: int, caches: Any
+        self, tok: jax.Array, pos, caches: Any, *, active=None
     ) -> tuple[MultiTierStepReport, Any]:
-        res, caches = self.executor.step(tok, pos, caches)
+        res, caches = self.executor.step(tok, pos, caches, active=active)
         # A hop whose bandwidth was never set (TierSpec.uplink_bps defaults
         # to 0.0) reports 0.0 transfer time, matching the executor's
         # sim_transfer_s accounting, instead of dividing by zero.
@@ -138,6 +146,8 @@ class MultiTierServer:
             sim_transfer_s=res.sim_transfer_s,
             overflow_retries=self.executor.overflow_retries,
             pipeline_fallbacks=self.executor.pipeline_fallbacks,
+            live=res.live,
+            tier_result=res,
         )
         return rep, caches
 
@@ -146,19 +156,23 @@ class MultiTierServer:
         the *measured* per-branch exit fractions substituted for p.  When
         the runtime compacts, the estimate uses the bucketed cost so it is
         honest about padding waste; when it pipelines, the overlap cost so
-        it reports the steady-state bottleneck stage."""
+        it reports the steady-state bottleneck stage.  The step's live
+        width feeds the occupancy term under continuous batching."""
         if self.cost is None:
             return None
         t_c, alpha = self.cost
         p = np.zeros(len(t_c))
         batch = res.tokens.shape[0]
-        alive = float(batch)
+        live = getattr(res, "live", 0) or batch
+        alive = float(live)
         for layer in sorted(res.branch_take):
             took = float(res.branch_take[layer].sum())
             p[layer] = took / alive if alive > 0 else 0.0
             alive -= took
+        bucketed = self.compaction == "bucketed"
         return expected_time_multitier(
             t_c, alpha, p, list(self.tiers), self.cuts,
-            batch=batch if self.compaction == "bucketed" else None,
+            batch=batch if bucketed else None,
             overlap=self.overlap == "pipelined",
+            occupancy=live / batch if bucketed else None,
         )

@@ -33,7 +33,13 @@ from repro.configs.base import ModelConfig
 from repro.core.latency import expected_time
 from repro.core.multitier import TierSpec, expected_time_multitier
 from repro.core.types import CostProfile, NetworkProfile
-from repro.serving.tiers import HopCompaction, TierExecutor, segments_for_cuts
+from repro.serving.scheduler import ServesRequests
+from repro.serving.tiers import (
+    HopCompaction,
+    TierExecutor,
+    TierStepResult,
+    segments_for_cuts,
+)
 
 __all__ = ["PartitionedServer", "StepReport"]
 
@@ -53,10 +59,16 @@ class StepReport:
     # to serial because of one.
     overflow_retries: int = 0
     pipeline_fallbacks: int = 0
+    #: Live request slots this step decoded (== B under lock-step); the
+    #: estimator prices the steady-state live width through it.
+    live: int = 0
+    #: The executor's raw result (per-slot tokens_dev / exit_tier / probe
+    #: coverage) — what the request scheduler and controller consume.
+    tier_result: TierStepResult | None = None
 
 
 @dataclasses.dataclass
-class PartitionedServer:
+class PartitionedServer(ServesRequests):
     cfg: ModelConfig
     params: Any
     split_layer: int  # the plan's v_s (0 = cloud-only, L = edge-only)
@@ -68,6 +80,8 @@ class PartitionedServer:
     use_kernels: bool | None = None  # Pallas decode path; None = cfg/auto
     hint_window: int = 8  # windowed-max bucket hints (1 = last step only)
     bucket_headroom: float = 0.0  # fractional bucket padding vs retries
+    slots: int = 8  # request-scheduler KV slots (submit/run/drain API)
+    context_len: int = 4096  # scheduler cache capacity per slot
 
     def __post_init__(self):
         self.executor = TierExecutor(
@@ -94,8 +108,10 @@ class PartitionedServer:
         self.split_layer = split_layer
 
     # ------------------------------------------------------------------
-    def step(self, tok: jax.Array, pos: int, caches: Any) -> tuple[StepReport, Any]:
-        res, caches = self.executor.step(tok, pos, caches)
+    def step(
+        self, tok: jax.Array, pos, caches: Any, *, active=None
+    ) -> tuple[StepReport, Any]:
+        res, caches = self.executor.step(tok, pos, caches, active=active)
         shipped = res.shipped_per_hop[0] if res.shipped_per_hop else 0
         nbytes = res.bytes_per_hop[0] if res.bytes_per_hop else 0.0
         rep = StepReport(
@@ -109,6 +125,8 @@ class PartitionedServer:
             sim_transfer_s=res.sim_transfer_s,
             overflow_retries=self.executor.overflow_retries,
             pipeline_fallbacks=self.executor.pipeline_fallbacks,
+            live=res.live,
+            tier_result=res,
         )
         return rep, caches
 
@@ -131,13 +149,16 @@ class PartitionedServer:
         (``overlap="pipelined"``) the estimate uses the unified lattice
         cost so K=2 reports the same padding-honest / bottleneck-stage
         numbers as MultiTierServer rather than the ideal serial
-        ``surv(s) * B`` cloud term."""
+        ``surv(s) * B`` cloud term.  Under continuous batching the step's
+        live width feeds the occupancy term, so the estimate prices the
+        *steady-state* live batch rather than the nominal one."""
         if self.cost_profile is None:
             return None
         prof = self.cost_profile
         batch = res.tokens.shape[0]
+        live = getattr(res, "live", 0) or batch
         if prof.branches:
-            alive = float(batch)
+            alive = float(live)
             measured: dict[int, float] = {}
             for layer in sorted(res.branch_take):
                 took = float(res.branch_take[layer].sum())
@@ -149,17 +170,16 @@ class PartitionedServer:
             )
             prof = dataclasses.replace(prof, branches=branches)
         pipelined = self.overlap == "pipelined"
-        if (
-            (self.compaction == "bucketed" or pipelined)
-            and prof.network is not None
-        ):
+        bucketed = self.compaction == "bucketed"
+        if (bucketed or pipelined) and prof.network is not None:
             tiers = [
                 TierSpec("edge", prof.gamma, prof.network.bandwidth_bps),
                 TierSpec("cloud", 1.0),
             ]
             return expected_time_multitier(
                 prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers, (s,),
-                batch=batch if self.compaction == "bucketed" else None,
+                batch=batch if bucketed else None,
                 overlap=pipelined,
+                occupancy=live / batch if bucketed else None,
             )
         return expected_time(prof, s)

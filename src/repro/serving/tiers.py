@@ -144,6 +144,30 @@ Segment functions are cached by ``(spec, bucket)`` where spec is
 one cut re-uses the jitted callables of every unchanged tier segment, and
 a survivor-count change *within* a bucket re-jits nothing
 (``trace_counts`` exposes this for tests).
+
+Continuous batching (request slots)
+-----------------------------------
+The executor also serves as the data plane of the request scheduler
+(:mod:`repro.serving.scheduler`): the batch dimension becomes ``B`` KV
+*slots* whose occupants change over time.  Three extensions make that
+possible without ever reshaping a cache or re-jitting a segment:
+
+  * ``step(..., pos=(B,), active=(B,))`` — per-sequence absolute
+    positions (each request decodes at its own RoPE position and ring
+    slot) and a live mask: dead slots enter the step pre-exited, so the
+    entry tier masks them and downstream compaction drops them — the
+    bucket ladder naturally tracks live occupancy;
+  * :meth:`TierExecutor.prefill_rows` — admit waiting prompts by
+    prefilling them *into* freed cache rows in place (each row ends
+    exactly as a fresh solo prefill: stale slots reset to empty);
+  * :meth:`TierExecutor.reset_rows` — optional retirement hygiene that
+    invalidates a row's slots without touching its neighbors.
+
+The invariant all three preserve: a request's token/exit trajectory is
+bitwise identical to running it alone from its admission state,
+independent of which slot it recycled or who occupied it before (the
+scheduler tests pin this for K in {1, 2, 3}, compaction on/off, and the
+kernel path in interpret mode).
 """
 
 from __future__ import annotations
@@ -160,13 +184,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.calibration import normalized_entropy
-from repro.core.multitier import bucket_for
+from repro.core.multitier import bucket_for, bucket_ladder
 from repro.kernels import ops as kernel_ops
 from repro.models.layers import norm_apply
 from repro.models.model import (
     _branch_logits,
     _unembed,
     embed_decode,
+    prefill,
     run_trunk,
     trunk_layout,
 )
@@ -298,6 +323,19 @@ class TierStepResult:
     last_logits: jax.Array  # (B, V) main-head logits, device-resident
     compaction: tuple[HopCompaction, ...] = ()  # per executed hop
     sim_transfer_s: tuple[float, ...] = ()  # simulated uplink time per hop
+    #: Sequences live at step entry (== B under lock-step; the scheduler's
+    #: occupied slots under continuous batching).  ``active`` is the host
+    #: mask the step ran with (None = every row live); dead slots read
+    #: exited=True and garbage tokens — callers index by their live slots.
+    live: int = 0
+    active: np.ndarray | None = None
+    #: Sampled probe steps only: layer -> (B,) bool mask of the rows whose
+    #: branch head was actually evaluated (``probe_sample_frac`` < 1) — the
+    #: controller must count arrivals over covered rows only.  Empty for
+    #: full probes and normal steps.
+    branch_probe_mask: dict[int, np.ndarray] = dataclasses.field(
+        default_factory=dict
+    )
 
 
 class TierExecutor:
@@ -368,6 +406,16 @@ class TierExecutor:
         #: is evaluated and reported (would-exit masks + entropies) without
         #: touching exits/tokens/caches.  Consumed by step().
         self.probe_next = False
+        #: Fraction of the batch a probe step evaluates the extra branch
+        #: heads on (1.0 = every row).  Sampled probes price exploration at
+        #: a sub-batch of head FLOPs; the evaluated rows are reported in
+        #: ``TierStepResult.branch_probe_mask`` so the controller counts
+        #: arrivals over covered rows only.  On a compacted tier the sample
+        #: indexes the dense sub-batch (the survivor permutation lives on
+        #: device), so *which* batch rows a probe covers follows the
+        #: compaction order — always reported, estimates stay unbiased.
+        self.probe_sample_frac = 1.0
+        self._probe_offset = 0  # rotation cursor so samples cycle the batch
         self.total_layers = sum(n for _, _, n in trunk_layout(cfg))
         self._fn_cache: dict[tuple, Any] = {}
         self.host_syncs = 0
@@ -427,6 +475,7 @@ class TierExecutor:
         head: bool,
         bucket: int | None = None,
         probe: tuple[int, ...] = (),
+        probe_m: int | None = None,
     ):
         """Build (or fetch) the jitted callable for one tier segment.
 
@@ -434,11 +483,15 @@ class TierExecutor:
         every tier in compaction="off" mode).  ``bucket=b``: the fused
         compact(b) -> run -> scatter step described in the module
         docstring.  ``probe``: extra branch layers evaluated report-only
-        (would-exit masks + entropies; exits/tokens untouched).  All
-        variants share the signature
-        ``fn(params, x, pos, exited, chosen, caches)`` with full-batch x.
+        (would-exit masks + entropies; exits/tokens untouched);
+        ``probe_m`` samples those heads on ``probe_m`` rows instead of the
+        whole sub-batch (the evaluated rows come back as a coverage mask).
+        All variants share the signature
+        ``fn(params, x, pos, exited, chosen, caches[, probe_rows])`` with
+        full-batch x; ``pos`` is the shared () step position or the
+        continuous-batching per-sequence (B,) positions.
         """
-        key = ((*seg.spec(head), probe), bucket)
+        key = ((*seg.spec(head), probe, probe_m), bucket)
         if key in self._fn_cache:
             return self._fn_cache[key]
         cfg = self.cfg
@@ -463,10 +516,16 @@ class TierExecutor:
                 btok = jnp.argmax(logits_b, -1).astype(jnp.int32)
             return flag & ~ex, e, btok
 
-        def fn(params, x, pos, exited, chosen, caches):
+        def fn(params, x, pos, exited, chosen, caches, probe_rows=None):
             trace_counts[key] = trace_counts.get(key, 0) + 1
             batch = x.shape[0]
-            positions = pos[None].astype(jnp.int32)
+            # Shared () step position -> (1,); continuous-batching (B,)
+            # per-sequence positions -> (B, 1) (each row decodes at its own
+            # absolute position).
+            positions = (
+                pos[None].astype(jnp.int32) if pos.ndim == 0
+                else pos[:, None].astype(jnp.int32)
+            )
             if bucket is None:
                 xb, ex, ch, rows, rows_rw = x, exited, chosen, None, None
             else:
@@ -476,6 +535,8 @@ class TierExecutor:
                 rows = order[:bucket]
                 xb = x[rows]
                 ex, ch = exited[rows], chosen[rows]
+                if positions.ndim == 2:
+                    positions = positions[rows]
                 # Padding rows read clamped garbage (discarded) and carry
                 # an out-of-bounds sentinel so their cache writes drop:
                 # downstream KV validity is a pure function of exits, not
@@ -487,26 +548,45 @@ class TierExecutor:
                 layer_range=(lo, hi), collect=eval_layers, rows=rows_rw,
                 use_kernels=use_kernels,
             )
-            bl = _branch_logits(params, collected, cfg)
             sub = xb.shape[0]
+            if probe_m is not None:
+                # Sampled probe: the extra heads run on probe_m rows only.
+                # probe_rows are original-batch indices; fold them into the
+                # sub-batch coordinate space (compacted tiers run a dense
+                # permutation of it) and remember which batch rows that
+                # covers for the report.
+                pr_idx = probe_rows.astype(jnp.int32) % sub
+                plan_hidden = {l: collected[l] for l in branches}
+                probe_hidden = {l: collected[l][pr_idx] for l in probe}
+                bl = _branch_logits(params, plan_hidden, cfg)
+                blp = _branch_logits(params, probe_hidden, cfg)
+            else:
+                pr_idx = None
+                bl = _branch_logits(params, collected, cfg)
+                blp = bl
             takes, ents, ptakes, pents = [], [], [], []
             for layer in eval_layers:
-                take, e, btok = exit_decision(bl[layer][:, 0], ex)
                 if layer in plan_set:
+                    take, e, btok = exit_decision(bl[layer][:, 0], ex)
                     ch = jnp.where(take, btok, ch)
                     ex = ex | take
                     takes.append(take)
                     ents.append(e)
                 else:  # probe: report-only, never alters the trajectory
+                    exp = ex if pr_idx is None else ex[pr_idx]
+                    take, e, _ = exit_decision(blp[layer][:, 0], exp)
                     ptakes.append(take)
                     pents.append(e)
+            psub = sub if probe_m is None else probe_m
             take_s = jnp.stack(takes) if takes else jnp.zeros((0, sub), bool)
             ents_s = (
                 jnp.stack(ents) if ents else jnp.zeros((0, sub), jnp.float32)
             )
-            ptake_s = jnp.stack(ptakes) if ptakes else jnp.zeros((0, sub), bool)
+            ptake_s = (
+                jnp.stack(ptakes) if ptakes else jnp.zeros((0, psub), bool)
+            )
             pents_s = (
-                jnp.stack(pents) if pents else jnp.zeros((0, sub), jnp.float32)
+                jnp.stack(pents) if pents else jnp.zeros((0, psub), jnp.float32)
             )
             out: dict[str, Any] = {"caches": new_caches}
             logits = None
@@ -521,7 +601,20 @@ class TierExecutor:
             if bucket is None:
                 out["exited"], out["chosen"] = ex, ch
                 out["take"], out["ents"] = take_s, ents_s
-                out["ptake"], out["pents"] = ptake_s, pents_s
+                if probe_m is None:
+                    out["ptake"], out["pents"] = ptake_s, pents_s
+                else:
+                    out["ptake"] = (
+                        jnp.zeros((len(probe), batch), bool)
+                        .at[:, pr_idx].set(ptake_s)
+                    )
+                    out["pents"] = (
+                        jnp.zeros((len(probe), batch), jnp.float32)
+                        .at[:, pr_idx].set(pents_s)
+                    )
+                    out["pcover"] = (
+                        jnp.zeros((batch,), bool).at[pr_idx].set(True)
+                    )
                 if head:
                     out["logits"] = logits
                 else:
@@ -537,14 +630,19 @@ class TierExecutor:
                 out["ents"] = (
                     jnp.zeros((nbr, batch), jnp.float32).at[:, rows].set(ents_s)
                 )
+                pcols = rows if probe_m is None else rows[pr_idx]
                 out["ptake"] = (
                     jnp.zeros((len(probe), batch), bool)
-                    .at[:, rows].set(ptake_s)
+                    .at[:, pcols].set(ptake_s)
                 )
                 out["pents"] = (
                     jnp.zeros((len(probe), batch), jnp.float32)
-                    .at[:, rows].set(pents_s)
+                    .at[:, pcols].set(pents_s)
                 )
+                if probe_m is not None:
+                    out["pcover"] = (
+                        jnp.zeros((batch,), bool).at[pcols].set(True)
+                    )
                 if head:
                     out["logits"] = (
                         jnp.zeros((batch, logits.shape[-1]), logits.dtype)
@@ -592,6 +690,78 @@ class TierExecutor:
         wait = prev_done - time.perf_counter()
         if wait > 0:
             time.sleep(wait)
+
+    # ------------------------------------------------- request admission
+    def prefill_rows(
+        self, caches: Any, tokens: jax.Array, rows
+    ) -> tuple[Any, jax.Array]:
+        """Admit a block of waiting prompts into freed cache rows.
+
+        ``tokens`` (n, P) prompt token ids; prompt row ``i`` prefills into
+        row ``rows[i]`` of the resident full-batch caches *in place* — the
+        row ends exactly as a fresh solo prefill of that prompt (stale
+        slots from the previous occupant reset to empty), so no cache
+        reshape or re-jit of any decode segment is ever needed.  Rows with
+        an out-of-bounds sentinel (>= batch) drop their writes, letting
+        callers pad admission groups to reusable (P, n) jit shapes.
+
+        Returns (new caches, first decode-step input token per prompt row
+        (n,), device-resident — admission performs no host sync)."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        n, plen = tokens.shape
+        key = ("prefill", plen, n)
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+            trace_counts = self.trace_counts
+
+            def prefill_fn(params, toks, rows_, caches_):
+                trace_counts[key] = trace_counts.get(key, 0) + 1
+                logits, new_caches = prefill(
+                    params, {"tokens": toks}, cfg, caches_, rows=rows_
+                )
+                tok0 = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+                return tok0, new_caches
+
+            fn = jax.jit(prefill_fn)
+            self._fn_cache[key] = fn
+        tok0, caches = fn(
+            self.params, tokens, jnp.asarray(rows, jnp.int32), caches
+        )
+        return caches, tok0
+
+    def reset_rows(self, caches: Any, rows) -> Any:
+        """Mark cache rows empty without moving anything: per-sequence slot
+        validity (``pos``) -> -1 and SSM/conv state -> 0 for the given rows
+        (K/V payloads stay in place — unreachable once their slot is
+        invalid).  Retirement hygiene; admission prefill also resets its
+        row implicitly, so this is optional between occupants."""
+        rows = jnp.asarray(rows, jnp.int32)
+        key = ("reset", int(rows.shape[0]))
+        fn = self._fn_cache.get(key)
+        if fn is None:
+
+            def reset_fn(caches_, rows_):
+                def walk(tree):
+                    out = {}
+                    for k, v in tree.items():
+                        if isinstance(v, dict):
+                            out[k] = walk(v)
+                        elif k == "pos":
+                            out[k] = v.at[:, rows_].set(-1, mode="drop")
+                        elif k in ("conv", "ssm"):
+                            out[k] = v.at[:, rows_].set(
+                                jnp.zeros((), v.dtype), mode="drop"
+                            )
+                        else:
+                            out[k] = v
+                    return out
+
+                return walk(caches_)
+
+            fn = jax.jit(reset_fn)
+            self._fn_cache[key] = fn
+        return fn(caches, rows)
 
     # -------------------------------------------------------------- step
     def _plan_buckets(self, batch: int) -> dict[int, int]:
@@ -643,15 +813,23 @@ class TierExecutor:
     def _run_once(
         self, tok: jax.Array, pos, caches: Any, buckets: dict[int, int],
         probe_map: dict[int, tuple[int, ...]] | None = None,
+        exited0: jax.Array | None = None,
+        probe_rows: jax.Array | None = None,
+        probe_m: int | None = None,
+        active_np: np.ndarray | None = None,
     ) -> tuple:
         """Dispatch all tier segments and perform the single host sync.
         Returns (host dict, caches, entering-survivor counts per segment,
-        chosen, logits, alive-after-segment counts)."""
+        chosen, logits, alive-after-segment counts).  ``exited0`` seeds the
+        exit mask with the dead slots of a continuous-batching step (they
+        compact away downstream exactly like early exits)."""
         probe_map = probe_map or {}
         cfg = self.cfg
         batch = tok.shape[0]
         posj = jnp.asarray(pos, jnp.int32)
-        exited = jnp.zeros((batch,), bool)
+        exited = (
+            jnp.zeros((batch,), bool) if exited0 is None else exited0
+        )
         chosen = jnp.zeros((batch,), jnp.int32)
         x: jax.Array = tok
         fetch: dict[str, Any] = {}
@@ -672,9 +850,15 @@ class TierExecutor:
                 # validity stays a pure function of exits, never of which
                 # fn variant a hint happened to select.
                 fn = self._segment_fn(
-                    seg, head, None if b is None else min(b, batch), probe=pr
+                    seg, head, None if b is None else min(b, batch), probe=pr,
+                    probe_m=probe_m if pr else None,
                 )
-            out = fn(self.params, x, posj, exited, chosen, caches)
+            if pr and probe_m is not None:
+                out = fn(
+                    self.params, x, posj, exited, chosen, caches, probe_rows
+                )
+            else:
+                out = fn(self.params, x, posj, exited, chosen, caches)
             caches = out["caches"]
             exited, chosen = out["exited"], out["chosen"]
             if seg.branches:
@@ -683,6 +867,8 @@ class TierExecutor:
             if pr:
                 fetch[f"ptake{i}"] = out["ptake"]
                 fetch[f"pents{i}"] = out["pents"]
+                if probe_m is not None:
+                    fetch[f"pcover{i}"] = out["pcover"]
             if head:
                 logits = out["logits"]
             else:
@@ -694,8 +880,12 @@ class TierExecutor:
         self.host_syncs += 1
 
         # Host-side bookkeeping on the fetched masks (no further syncs):
-        # cumulative exits -> survivors entering each segment.
-        exited_run = np.zeros((batch,), bool)
+        # cumulative exits -> survivors entering each segment.  Dead slots
+        # are never alive, so they neither ship nor widen buckets.
+        exited_run = (
+            np.zeros((batch,), bool) if active_np is None
+            else ~np.asarray(active_np, bool)
+        )
         alive_after_seg = {}
         for i, seg in enumerate(self.segments):
             for row, _layer in enumerate(seg.branches):
@@ -708,16 +898,58 @@ class TierExecutor:
         }
         return host, caches, entering, chosen, logits, alive_after_seg
 
-    def step(self, tok: jax.Array, pos, caches: Any) -> tuple[TierStepResult, Any]:
+    def step(
+        self, tok: jax.Array, pos, caches: Any, *, active=None
+    ) -> tuple[TierStepResult, Any]:
         """One decode step across all tiers: exactly one host sync (plus
-        one per rare overflow-retry iteration, see module docstring)."""
+        one per rare overflow-retry iteration, see module docstring).
+
+        ``pos`` is the shared step position (lock-step) or a per-sequence
+        (B,) vector of absolute positions (continuous batching).
+        ``active`` (B,) bool marks live request slots: dead slots enter the
+        step pre-exited — the entry tier masks them, downstream tiers
+        compact them away, and they never count as survivors or ship."""
         cfg = self.cfg
         batch = tok.shape[0]
+        # Snapshot (never alias) the caller's mask: the scheduler mutates
+        # its live mask when requests retire, and this result — including
+        # its on_step/controller consumers — must keep the mask the step
+        # actually ran with.
+        active_np = None if active is None else np.array(active, dtype=bool)
+        exited0 = None if active_np is None else jnp.asarray(~active_np)
+        live = batch if active_np is None else int(active_np.sum())
         probe_map = self._probe_layers() if self.probe_next else {}
         self.probe_next = False
+        probe_rows = None
+        probe_m = None
+        if probe_map and self.probe_sample_frac < 1.0:
+            pool = (
+                np.flatnonzero(active_np)
+                if active_np is not None and active_np.any()
+                else np.arange(batch)
+            )
+            # Sample size: the configured fraction of the nominal batch,
+            # capped at the live pool (no duplicate rows burning head
+            # FLOPs at low occupancy) and floored to the bucket ladder so
+            # the probe-fn shape set stays bounded as occupancy drifts.
+            want = min(
+                max(1, math.ceil(self.probe_sample_frac * batch)), len(pool)
+            )
+            m = max(
+                b for b in bucket_ladder(batch) if b <= want
+            )
+            if m < batch:
+                # Deterministic rotation over the live rows: successive
+                # probes cycle the pool so every row's entropy gets
+                # sampled without an RNG in the hot loop.
+                sel = pool[(self._probe_offset + np.arange(m)) % len(pool)]
+                self._probe_offset = (self._probe_offset + m) % len(pool)
+                probe_rows = jnp.asarray(sel, jnp.int32)
+                probe_m = m
         buckets = self._plan_buckets(batch)
         host, new_caches, entering, chosen, logits, alive = self._run_once(
-            tok, pos, caches, buckets, probe_map
+            tok, pos, caches, buckets, probe_map,
+            exited0, probe_rows, probe_m, active_np,
         )
         used = {
             i: min(buckets.get(i, batch), batch) for i in entering
@@ -748,7 +980,8 @@ class TierExecutor:
                     for i in entering
                 }
             host, new_caches, entering, chosen, logits, alive = self._run_once(
-                tok, pos, caches, buckets, probe_map
+                tok, pos, caches, buckets, probe_map,
+                exited0, probe_rows, probe_m, active_np,
             )
             used = {i: min(buckets.get(i, batch), batch) for i in entering}
         self._observe_hints(entering)
@@ -759,6 +992,7 @@ class TierExecutor:
         exit_tier = np.full((batch,), -1, np.int32)
         branch_take: dict[int, np.ndarray] = {}
         branch_entropy: dict[int, np.ndarray] = {}
+        branch_probe_mask: dict[int, np.ndarray] = {}
         for i, seg in enumerate(self.segments):
             for row, layer in enumerate(seg.branches):
                 mask = host[f"take{i}"][row]
@@ -768,6 +1002,8 @@ class TierExecutor:
             for row, layer in enumerate(probe_map.get(i, ())):
                 branch_take[layer] = host[f"ptake{i}"][row]
                 branch_entropy[layer] = host[f"pents{i}"][row]
+                if probe_m is not None:
+                    branch_probe_mask[layer] = host[f"pcover{i}"]
 
         # Hops: one per cut that still has layers (or the head) downstream.
         shipped, nbytes, compaction = [], [], []
@@ -813,5 +1049,8 @@ class TierExecutor:
             last_logits=logits,
             compaction=tuple(compaction),
             sim_transfer_s=sim,
+            live=live,
+            active=active_np,
+            branch_probe_mask=branch_probe_mask,
         )
         return result, new_caches

@@ -1,12 +1,15 @@
 #!/bin/sh
 # Tier-1 CI entry: run the test suite exactly as ROADMAP.md specifies
-# (tests/test_compaction.py, tests/test_kernel_runtime.py and the
-# runtime/controller suites are part of the default collection), then
-# smoke-run the serving benchmark sweep and the kernel-vs-jnp decode
-# sweep in fast mode so the masked-vs-compacted FLOPs assertion, the
-# 1-sync invariant, the serial-vs-pipelined overlap cell, and every
-# Pallas kernel path (interpret mode off-TPU, identical-trajectory
-# assert inline) are exercised end to end on every CI pass.
+# (tests/test_compaction.py, tests/test_kernel_runtime.py,
+# tests/test_scheduler.py and the runtime/controller suites are part of
+# the default collection), then smoke-run the serving benchmark sweep
+# and the kernel-vs-jnp decode sweep in fast mode so the
+# masked-vs-compacted FLOPs assertion, the 1-sync invariant, the
+# serial-vs-pipelined overlap cell, the continuous-vs-lock-step request
+# cell (Poisson arrivals, recycled KV slots — REPRO_BENCH_FAST runs it;
+# `make bench-requests` selects it alone), and every Pallas kernel path
+# (interpret mode off-TPU, identical-trajectory assert inline) are
+# exercised end to end on every CI pass.
 # Usage: tools/ci.sh [extra pytest args]
 #   REPRO_CI_BENCH=0 skips the benchmark smokes (pytest only).
 set -e
