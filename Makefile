@@ -1,13 +1,20 @@
 PY := python
 
-.PHONY: test test-fast bench-serving bench-serving-fast bench-overlap bench-requests bench-kernels bench-kernels-full example
+.PHONY: test test-fast test-sharded bench-serving bench-serving-fast bench-overlap bench-requests bench-kernels bench-kernels-full bench-check example
 
 # Tier-1 verify (ROADMAP): the full suite with the src layout on the path.
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-test-fast:
+test-fast: test-sharded
 	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_tiers.py tests/test_compaction.py tests/test_scheduler.py tests/test_multitier.py tests/test_hlo_analysis.py
+
+# Multi-device lane: 8 virtual CPU devices (XLA_FLAGS must precede jax
+# init, hence the separate pytest process) running the sharded-tier
+# equivalence suite (SPMD trajectory identity, policy lowering, mesh
+# construction, sharding-aware partition costs).
+test-sharded:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" PYTHONPATH=src $(PY) -m pytest -x -q tests/test_sharded_tiers.py
 
 bench-serving:
 	PYTHONPATH=src $(PY) benchmarks/serving_step.py
@@ -36,6 +43,11 @@ bench-kernels:
 # Full sweep incl. the serving-scale jnp reference timings.
 bench-kernels-full:
 	PYTHONPATH=src $(PY) benchmarks/kernel_micro.py
+
+# Diff the emitted BENCH_*.json bundles against the last committed ones:
+# strict (structural) metrics exactly, wall-clock within REPRO_BENCH_TOL.
+bench-check:
+	$(PY) tools/bench_check.py BENCH_serving.json BENCH_kernels.json
 
 example:
 	PYTHONPATH=src $(PY) examples/serve_partitioned.py

@@ -1,0 +1,93 @@
+"""Machine-readable benchmark bundles (``BENCH_<name>.json``).
+
+Every ``make bench-*`` target emits one bundle next to the repo root so
+perf claims are diffable across commits: ``tools/bench_check.py`` compares
+the current bundle against the last *committed* one (``git show
+HEAD:BENCH_<name>.json``) and flags regressions.
+
+Bundle schema (version 1)::
+
+    {
+      "schema": 1,
+      "bench": "serving",
+      "git_sha": "<HEAD at emission>",
+      "cells": {
+        "<cell>": {
+          "config": {...},   # what was run (batch, steps, fast flag, ...)
+          "strict": {...},   # deterministic metrics: must match exactly
+          "timing": {...}    # wall-clock metrics: ratio-tolerance compare
+        }
+      }
+    }
+
+``strict`` holds structure-derived numbers (host syncs/step, decode-step
+counts, analytic FLOPs, solver cuts) that only change when the code
+changes; ``timing`` holds noisy wall-clock numbers.  Cells are *merged*
+into an existing bundle on write, so a partial run (``REPRO_BENCH_ONLY``)
+refreshes only its own cells.  A cell is only comparable when its
+``config`` matches the committed one — fast-mode runs never get diffed
+against full-mode baselines.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+
+__all__ = ["BenchBundle", "bundle_path", "git_sha"]
+
+SCHEMA = 1
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, cwd=_REPO_ROOT, timeout=10,
+        )
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def bundle_path(name: str) -> str:
+    return os.path.join(
+        os.environ.get("REPRO_BENCH_DIR", _REPO_ROOT), f"BENCH_{name}.json"
+    )
+
+
+class BenchBundle:
+    def __init__(self, name: str):
+        self.name = name
+        self.cells: dict[str, dict] = {}
+
+    def cell(self, name: str, *, config=None, strict=None, timing=None):
+        """Record one benchmark cell; values must be JSON-serializable."""
+        self.cells[name] = {
+            "config": dict(config or {}),
+            "strict": dict(strict or {}),
+            "timing": dict(timing or {}),
+        }
+
+    def write(self, path: str | None = None) -> str:
+        path = path or bundle_path(self.name)
+        cells = {}
+        if os.path.exists(path):  # partial runs refresh only their cells
+            try:
+                with open(path) as f:
+                    cells = json.load(f).get("cells", {})
+            except (json.JSONDecodeError, OSError):
+                cells = {}
+        cells.update(self.cells)
+        data = {
+            "schema": SCHEMA,
+            "bench": self.name,
+            "git_sha": git_sha(),
+            "cells": dict(sorted(cells.items())),
+        }
+        with open(path, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=False)
+            f.write("\n")
+        return path

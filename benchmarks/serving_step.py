@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from bench_io import BenchBundle
 from repro.configs import get_smoke_config
 from repro.core.multitier import TierSpec, expected_time_multitier, solve_multitier
 from repro.models import model as M
@@ -167,7 +168,7 @@ def downstream_flops_per_row(cfg, split):
     return 2.0 * (layers_dn * per_layer + head)
 
 
-def part1_legacy_vs_fused(cfg, params):
+def part1_legacy_vs_fused(cfg, params, bundle):
     total = cfg.num_layers
     t_old, s_old = run_legacy(cfg, params)
     # Like-for-like wall-time comparison: edge-only (split == L) evaluates
@@ -197,9 +198,24 @@ def part1_legacy_vs_fused(cfg, params):
     assert s_old >= 2 + 2 * len(cfg.branch_layers) - 1e-9
     print(f"OK: fused partitioned decode performs exactly 1 host sync/step "
           f"(+{r_new + r_mid} overflow retries)")
+    bundle.cell(
+        "legacy_vs_fused",
+        config=dict(batch=BATCH, steps=STEPS, fast=FAST),
+        strict=dict(
+            legacy_syncs_per_step=s_old,
+            fused_edge_syncs_per_step=s_new,
+            fused_split2_syncs_per_step=s_mid,
+            overflow_retries=r_new + r_mid,
+        ),
+        timing=dict(
+            legacy_ms_step=t_old * 1e3,
+            fused_edge_ms_step=t_new,
+            fused_split2_ms_step=t_mid,
+        ),
+    )
 
 
-def part2_roofline_sweep(cfg0, params):
+def part2_roofline_sweep(cfg0, params, bundle):
     print("\n== roofline sweep: masked vs survivor-compacted downstream "
           "FLOPs/step ==")
     hdr = (f"{'B':>3} {'split':>5} {'regime':>9} {'exit%':>6} "
@@ -229,6 +245,19 @@ def part2_roofline_sweep(cfg0, params):
                       f"{gf_masked:>15.3f} {gf_comp:>16.3f} "
                       f"{save * 100:>5.0f}% {t_m:>8.2f} {t_c:>8.2f} "
                       f"{s_c:>6.2f} {retries:>6}")
+                bundle.cell(
+                    f"roofline_b{batch}_s{split}_{name}",
+                    config=dict(batch=batch, split=split, regime=name,
+                                fast=FAST),
+                    strict=dict(
+                        exit_rate=round(exit_rate, 6),
+                        survivors=surv, bucket=buck,
+                        gf_step_masked=round(gf_masked, 6),
+                        gf_step_compact=round(gf_comp, 6),
+                        syncs_per_step=s_c, overflow_retries=retries,
+                    ),
+                    timing=dict(ms_step_masked=t_m, ms_step_compact=t_c),
+                )
                 assert s_m == 1.0, "masked path must stay at 1 sync/step"
                 # Acceptance: at exit rates >= 0.5 the downstream tier's
                 # FLOPs scale with the padded survivor count, not with B.
@@ -243,7 +272,7 @@ def part2_roofline_sweep(cfg0, params):
               "(>=2x saving at exit rate >= 0.5)")
 
 
-def _plan_flip_cell() -> None:
+def _plan_flip_cell() -> dict:
     """Cost-model cell (no wall clock): on a profile whose transfers shrink
     with depth, the serial optimum hides on the edge (ship nothing) while
     the overlap optimum moves the cut forward — transfers below the
@@ -268,6 +297,12 @@ def _plan_flip_cell() -> None:
     )
     assert plan_o.expected_time_s <= plan_s.expected_time_s + 1e-12
     print("OK: the optimal cut moves when transfers overlap compute")
+    return dict(
+        serial_cut=list(plan_s.cut_after),
+        pipelined_cut=list(plan_o.cut_after),
+        serial_est_ms=round(plan_s.expected_time_s * 1e3, 6),
+        pipelined_est_ms=round(plan_o.expected_time_s * 1e3, 6),
+    )
 
 
 def _run_overlap(cfg, params, tiers, cuts, overlap, *, batch, steps, warmup):
@@ -292,10 +327,10 @@ def _run_overlap(cfg, params, tiers, cuts, overlap, *, batch, steps, warmup):
     return dt / steps * 1e3, rep.sim_transfer_s
 
 
-def part3_overlap_pipeline(cfg0, params):
+def part3_overlap_pipeline(cfg0, params, bundle):
     print("\n== overlap cell: serial vs pipelined tier runtime "
           "(simulate_network=True) ==")
-    _plan_flip_cell()
+    flip = _plan_flip_cell()
 
     # Transfer-dominated K=3 smoke: no exits, so every sequence crosses
     # both hops and the transfer sizes are deterministic.
@@ -360,6 +395,14 @@ def part3_overlap_pipeline(cfg0, params):
     print(f"OK: pipelined step tracks max_j(compute_j, transfer_j) "
           f"({t_pipe:.1f} ms vs est {est_pipe * 1e3:.1f} ms; serial pays "
           f"{t_serial:.1f} ms)")
+    bundle.cell(
+        "overlap_pipeline",
+        config=dict(batch=batch, steps=steps, cuts=list(cuts),
+                    hop_s=list(hop_s), fast=FAST),
+        strict=flip,
+        timing=dict(serial_ms_step=t_serial, pipelined_ms_step=t_pipe,
+                    est_pipelined_ms_step=est_pipe * 1e3),
+    )
 
 
 def _mixed_threshold(cfg, params, batch=8):
@@ -415,7 +458,7 @@ def _run_requests(srv, slots, work, policy):
     )
 
 
-def part4_continuous_batching(cfg0, params):
+def part4_continuous_batching(cfg0, params, bundle):
     print("\n== continuous batching: lock-step (gang) waves vs request "
           "admission into recycled KV slots ==")
     cfg = dataclasses.replace(
@@ -469,6 +512,21 @@ def part4_continuous_batching(cfg0, params):
           f"{c_steps} steps vs lock-step's {g_steps} "
           f"({c_toks / c_dt / (g_toks / g_dt):.2f}x tokens/sec) at 1 "
           f"sync/step")
+    for policy, (steps, dt, toks, ttfts, syncs, retries) in rows.items():
+        bundle.cell(
+            f"requests_{policy}",
+            config=dict(slots=slots, requests=n_req, fast=FAST),
+            strict=dict(
+                decode_steps=steps, tokens=toks,
+                syncs_per_step=round(syncs / max(steps, 1), 6),
+                overflow_retries=retries,
+            ),
+            timing=dict(
+                tokens_per_s=toks / dt,
+                ttft_p50_ms=float(np.percentile(ttfts, 50)) * 1e3,
+                ttft_p95_ms=float(np.percentile(ttfts, 95)) * 1e3,
+            ),
+        )
 
 
 def main() -> None:
@@ -480,16 +538,20 @@ def main() -> None:
           f"branches {cfg.branch_layers}, batch {BATCH}"
           f"{' [fast mode]' if FAST else ''}")
 
-    if ONLY == "overlap":
-        part3_overlap_pipeline(cfg, params)
-        return
-    if ONLY == "requests":
-        part4_continuous_batching(cfg, params)
-        return
-    part1_legacy_vs_fused(cfg, params)
-    part2_roofline_sweep(cfg, params)
-    part3_overlap_pipeline(cfg, params)
-    part4_continuous_batching(cfg, params)
+    bundle = BenchBundle("serving")
+    try:
+        if ONLY == "overlap":
+            part3_overlap_pipeline(cfg, params, bundle)
+            return
+        if ONLY == "requests":
+            part4_continuous_batching(cfg, params, bundle)
+            return
+        part1_legacy_vs_fused(cfg, params, bundle)
+        part2_roofline_sweep(cfg, params, bundle)
+        part3_overlap_pipeline(cfg, params, bundle)
+        part4_continuous_batching(cfg, params, bundle)
+    finally:
+        print(f"\nwrote {bundle.write()}")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,16 @@ per step is the pipeline bottleneck stage
     max_j( compute_j, transfer_j )
 
 rather than the serial sum — matching ``TierExecutor(overlap="pipelined")``.
+
+Sharded tiers (``TierSpec.devices > 1``).  A tier that is a device *mesh*
+rather than a chip computes each layer ``devices`` times faster but pays an
+intra-tier collective per layer: a ring all-reduce of the layer's
+activation (``alpha_i`` bytes) over the tier's ``ici_bps`` interconnect,
+``_COLLECTIVES_PER_LAYER`` times per layer.  Both the enumeration and the
+lattice DP price this through :func:`_tier_layer_seconds`, so the solver
+can trade "shard tier j over d chips" against "add a hop" — the
+generalization arXiv 2210.12219 argues for (per-device compute and
+collective/hop traffic priced jointly).
 Per-stage weights (reach / bucketed padding) are identical to serial mode;
 only the aggregation changes.  A bottleneck is not edge-decomposable over
 the lattice, so the overlap solve enumerates monotone cut vectors directly
@@ -81,12 +91,53 @@ def bucket_for(n: int, batch: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class TierSpec:
-    """One tier: per-layer compute times and uplink bandwidth to the NEXT
-    tier (bits/s; last tier's uplink is unused)."""
+    """One tier: per-layer compute times, uplink bandwidth to the NEXT
+    tier (bits/s; last tier's uplink is unused), and the tier's shard
+    width.
+
+    ``devices > 1`` models a tensor/expert-parallel tier (a pod slice,
+    not a chip): per-layer compute scales ``1/devices``, and every layer
+    pays an intra-tier collective term — a ring all-reduce of the layer's
+    activation over ``ici_bps`` (bits/s of intra-tier interconnect),
+    ``_COLLECTIVES_PER_LAYER`` times per layer.  An unset/zero ``ici_bps``
+    with ``devices > 1`` prices the collectives infinite (the shards
+    cannot reduce), mirroring :func:`_hop_seconds`'s dead-uplink policy.
+    """
 
     name: str
     gamma: float  # t_i at this tier = gamma * t_c (paper's convention)
     uplink_bps: float = 0.0
+    devices: int = 1  # shard width (tensor/expert-parallel fan-out)
+    ici_bps: float = 0.0  # intra-tier interconnect (per-device, bits/s)
+
+
+#: All-reduces a sharded trunk layer pays on its activation (attention wo
+#: partial-sum + MLP w_down partial-sum under Megatron-style sharding).
+_COLLECTIVES_PER_LAYER = 2.0
+
+
+def _collective_seconds(devices: int, bits: float, ici_bps: float) -> float:
+    """Intra-tier ring all-reduce time for one layer's activation: each
+    device moves ``2 * (d-1)/d * bits`` over its ICI link, twice per layer
+    (see ``_COLLECTIVES_PER_LAYER``).  Free at devices==1 or zero bits;
+    infinite over an unset interconnect (same policy as _hop_seconds)."""
+    if devices <= 1 or bits <= 0.0:
+        return 0.0
+    if not ici_bps or ici_bps <= 0.0:
+        return math.inf
+    ring = 2.0 * (devices - 1) / devices
+    return _COLLECTIVES_PER_LAYER * ring * bits / ici_bps
+
+
+def _tier_layer_seconds(tier: TierSpec, t_c_i: float, alpha_i: float) -> float:
+    """Unweighted seconds tier ``tier`` spends on one trunk layer: the
+    paper's ``gamma * t_c`` scaled by the shard width, plus the sharded
+    layer's collective term on its activation ``alpha_i`` bytes."""
+    d = max(int(tier.devices), 1)
+    t = tier.gamma * t_c_i / d
+    if d > 1:
+        t += _collective_seconds(d, alpha_i * 8.0, tier.ici_bps)
+    return t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,7 +321,9 @@ def solve_multitier(
             parent[0][j] = (0, j - 1)
     for i in range(1, n + 1):
         for j in range(last):
-            cand = dist[i - 1][j] + stay_w(i, j) * tiers[j].gamma * t_c[i]
+            cand = dist[i - 1][j] + stay_w(i, j) * _tier_layer_seconds(
+                tiers[j], t_c[i], alpha[i]
+            )
             if cand < dist[i][j]:
                 dist[i][j] = cand
                 parent[i][j] = (i - 1, j)
@@ -282,8 +335,14 @@ def solve_multitier(
                 dist[i][j] = cand
                 parent[i][j] = (i, j - 1)
 
-    # Closed-form frozen tail on the last tier (no branches there).
-    tail = np.concatenate([np.cumsum(t_c[::-1])[::-1][1:], [0.0]])
+    # Closed-form frozen tail on the last tier (no branches there); per-
+    # layer seconds include the last tier's shard-width/collective terms.
+    eff_last = np.array(
+        [0.0]
+        + [_tier_layer_seconds(tiers[last], t_c[i], alpha[i])
+           for i in range(1, n + 1)]
+    )
+    tail = np.concatenate([np.cumsum(eff_last[::-1])[::-1][1:], [0.0]])
     best_cost, best_i, end_on_last = np.inf, n, False
     best_j_final: int | None = None
     if last >= 1:
@@ -301,14 +360,18 @@ def solve_multitier(
                     occ * reach[i] * alpha[i] * 8.0,
                     tiers[last - 1].uplink_bps,
                 )
-                + tail_w * tiers[last].gamma * tail[i]
+                + tail_w * tail[i]
             )
             if hop < best_cost:
                 best_cost, best_i, end_on_last = float(hop), i, True
                 best_j_final = last - 1
     else:  # single tier: everything runs there (full batch when bucketed)
         w1 = reach[1:] if batch is None else np.ones(n)
-        best_cost = float(np.sum(w1 * tiers[0].gamma * t_c[1:]))
+        eff0 = np.array(
+            [_tier_layer_seconds(tiers[0], t_c[i], alpha[i])
+             for i in range(1, n + 1)]
+        )
+        best_cost = float(np.sum(w1 * eff0))
         best_i, end_on_last, best_j_final = n, False, 0
 
     if best_j_final is None or not np.isfinite(best_cost):
@@ -409,7 +472,7 @@ def expected_time_multitier(
                 w = reach[bounds[k - 1]] if (j == k - 1 and k > 1) else reach[i]
             else:
                 w = 1.0 if j == entry else _padded_frac(reach[lo] * occ, batch)
-            compute[j] += w * tiers[j].gamma * t_c[i]
+            compute[j] += w * _tier_layer_seconds(tiers[j], t_c[i], alpha[i])
     for j in range(k - 1):
         c = bounds[j + 1]
         if c < n:  # layers still run downstream -> the hop really happens

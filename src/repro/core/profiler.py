@@ -52,9 +52,28 @@ class HardwareSpec:
     link_bw: float = 50e9  # bytes/s per ICI link
     hbm_bytes: float = 16e9
 
-    def roofline_time(self, flops: float, bytes_: float) -> float:
-        """Execution time lower bound: max of compute and memory terms."""
-        return max(flops / self.peak_flops, bytes_ / self.hbm_bw)
+    def roofline_time(
+        self, flops: float, bytes_: float, devices: int = 1
+    ) -> float:
+        """Execution time lower bound: max of compute and memory terms.
+
+        ``devices > 1`` models a tensor-parallel shard of the layer: FLOPs
+        and HBM traffic split across the shard width; the collective cost
+        of re-assembling the activation is priced separately by
+        :func:`collective_time` (the sum feeds ``TierSpec.devices``-aware
+        profiles)."""
+        d = max(int(devices), 1)
+        return max(flops / d / self.peak_flops, bytes_ / d / self.hbm_bw)
+
+    def collective_time(self, activation_bytes: float, devices: int) -> float:
+        """Per-layer intra-tier collective term: a ring all-reduce of the
+        layer's activation over the ICI link, twice per layer (attention-
+        out + MLP-down partial sums) — the profiler-side mirror of
+        ``repro.core.multitier._collective_seconds``."""
+        d = max(int(devices), 1)
+        if d <= 1 or activation_bytes <= 0.0:
+            return 0.0
+        return 2.0 * (2.0 * (d - 1) / d) * activation_bytes / self.link_bw
 
 
 #: The target accelerator for this framework (system prompt constants).
@@ -93,12 +112,20 @@ def analyze_layer_costs(
     layer_fns: Sequence[tuple[str, Callable]],
     layer_inputs: Sequence,
     hardware: HardwareSpec = TPU_V5E,
+    *,
+    devices: int = 1,
 ) -> list[LayerCost]:
     """Roofline-cost every layer of a chain from its compiled HLO.
 
     ``layer_fns[i]`` maps layer i's input pytree to its output pytree;
     ``layer_inputs[i]`` is a pytree of ShapeDtypeStructs.  No device memory
     is allocated.
+
+    ``devices > 1`` prices a mesh-sharded tier: each layer's roofline time
+    divides by the shard width and gains the per-layer collective term
+    (``HardwareSpec.collective_time`` on the layer's output activation) —
+    the same two cost-model terms ``TierSpec(devices=, ici_bps=)`` carries
+    into :func:`repro.core.multitier.solve_multitier`.
     """
     out: list[LayerCost] = []
     for (name, fn), args in zip(layer_fns, layer_inputs):
@@ -107,7 +134,8 @@ def analyze_layer_costs(
         bytes_accessed = float(ca.get("bytes accessed", 0.0))
         shape = jax.eval_shape(fn, args)
         ob = output_bytes(shape)
-        t = hardware.roofline_time(flops, max(bytes_accessed, ob))
+        t = hardware.roofline_time(flops, max(bytes_accessed, ob), devices)
+        t += hardware.collective_time(ob, devices)
         out.append(LayerCost(name, flops, bytes_accessed, ob, t))
     return out
 
@@ -211,6 +239,7 @@ def profile_decode_layers(
     hardware: HardwareSpec = TPU_V5E,
     iters: int = 10,
     warmup: int = 2,
+    devices: int = 1,
 ) -> list[LayerCost]:
     """Per-layer decode-step costs of a BranchyNet trunk, kernel-aware.
 
@@ -220,9 +249,18 @@ def profile_decode_layers(
     ``use_kernels=True`` prices the Pallas kernel lowering, ``False`` the
     jnp lowering, ``None`` the config/backend default — so the resulting
     ``t_c`` feeds :class:`~repro.core.types.CostProfile` with
-    runtime-faithful ``compute_j`` terms."""
+    runtime-faithful ``compute_j`` terms.
+
+    ``devices`` (analyze mode) prices the layers as a mesh-sharded tier
+    would run them: roofline over the shard width plus the per-layer
+    collective term — sharded segments resolve ``use_kernels`` to the jnp
+    path, matching the runtime's sharded dispatch."""
     if mode not in ("analyze", "measure"):
         raise ValueError(f"unknown profiling mode: {mode!r}")
+    from repro.kernels.ops import resolve_use_kernels
+
+    if devices > 1:
+        use_kernels = resolve_use_kernels(use_kernels, sharded=True)
     fns, inputs = decode_layer_fns(
         cfg, params, batch, context_len, use_kernels=use_kernels
     )
@@ -233,5 +271,5 @@ def profile_decode_layers(
             )
             for args in inputs
         ]
-        return analyze_layer_costs(fns, abstract, hardware)
+        return analyze_layer_costs(fns, abstract, hardware, devices=devices)
     return measure_layer_times(fns, inputs, iters=iters, warmup=warmup)

@@ -61,10 +61,19 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def resolve_use_kernels(flag: bool | None) -> bool:
+def resolve_use_kernels(flag: bool | None, *, sharded: bool = False) -> bool:
     """The ``use_kernels`` tri-state: None = auto (kernels on TPU only),
     True/False force the kernel / pure-jnp path (True off-TPU runs the
-    kernels in interpret mode)."""
+    kernels in interpret mode).
+
+    ``sharded=True`` (a mesh-sharded tier segment) always resolves to the
+    jnp path: the Pallas kernels are single-device programs, and handing
+    them a mesh-global batch under SPMD would either fail to partition or
+    silently gather the full sharded KV cache to one device.  The jnp
+    lowering partitions cleanly under ``NamedSharding``; a per-shard
+    ``shard_map`` kernel dispatch is the documented follow-up."""
+    if sharded:
+        return False
     return on_tpu() if flag is None else bool(flag)
 
 

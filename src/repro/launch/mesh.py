@@ -10,9 +10,16 @@ Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_sizes"]
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "mesh_axis_sizes",
+    "mesh_devices",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,11 +28,43 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh():
-    """1x1 mesh over the real local device (CPU tests / examples)."""
+def make_local_mesh(*, data: int | None = None, model: int | None = None):
+    """("data", "model") mesh over the local devices.
+
+    Defaults put every device on the "model" axis (a (1, n) mesh — tensor
+    parallelism across whatever is available, which is the sharded-tier
+    serving shape).  ``data=`` / ``model=`` override either axis so tests
+    can build e.g. a (2, 4) mesh on 8 virtual CPU devices; an unset axis
+    absorbs the remaining devices.
+    """
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"))
+    if data is None and model is None:
+        data, model = 1, n
+    elif data is None:
+        data = max(n // model, 1)
+    elif model is None:
+        model = max(n // data, 1)
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1: data={data}, model={model}")
+    if data * model > n:
+        raise ValueError(
+            f"requested mesh ({data}, {model}) = {data * model} devices, "
+            f"but only {n} are available (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            f"jax initializes to virtualize more)"
+        )
+    return jax.make_mesh((data, model), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict[str, int]:
     return dict(mesh.shape)
+
+
+def mesh_devices(mesh) -> int:
+    """Shard width a tier running on ``mesh`` has: the total device count
+    across every mesh axis.  This is the ``TierSpec.devices`` /
+    ``TierSegment.devices`` term of the sharding-aware partition cost
+    (compute scales 1/devices, plus the intra-tier collective term)."""
+    if mesh is None:
+        return 1
+    return int(np.prod(list(mesh_axis_sizes(mesh).values()), dtype=np.int64))

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import dense, dense_init
+from repro.sharding.ctx import constrain
 
 __all__ = ["moe_init", "moe_apply", "router_topk"]
 
@@ -148,6 +149,10 @@ def moe_apply(
         )[..., :cap]  # (G,T,k,E,C) — slot `cap` is the drop bucket
         disp_sum = disp.sum(2)  # (G,T,E,C)
         x_e = jnp.einsum("gtec,gtd->gecd", disp_sum, xg)  # all-to-all here
+        # Pin the expert axis to "model" so the per-expert FFN runs
+        # expert-parallel instead of batch-replicated (no-op without an
+        # active mesh context).
+        x_e = constrain(x_e, ".v..")
         y_e = jax.vmap(lambda xe: _experts_ffn(params, xe, dtype))(x_e)
         comb = (disp * w[..., None, None]).sum(2)  # (G,T,E,C)
         yg = jnp.einsum("gtec,gecd->gtd", comb, y_e)
@@ -172,7 +177,7 @@ def moe_apply(
     else:
         raise ValueError(dispatch)
 
-    y = yg.reshape(-1, d)[:t].reshape(b, s, d)
+    y = constrain(yg.reshape(-1, d)[:t].reshape(b, s, d), "b..")
     if cfg.num_shared_experts:
         sp = params["shared"]
         g = dense(sp["w_gate"], x, dtype)

@@ -174,10 +174,15 @@ class RepartitionController:
             # stage under overlap, padding-honest under compaction).  The
             # lattice model (like the paper's Eq. 5) neglects branch-head
             # compute, so a profile with include_branch_compute=True is
-            # optimized without the gamma * t_b edge terms here.
+            # optimized without the gamma * t_b edge terms here.  A
+            # mesh-sharded server's shard widths / interconnect carry into
+            # the specs so re-solves price the sharded cloud tier.
+            dev = getattr(self.server, "tier_devices", None) or (1, 1)
+            ici = getattr(self.server, "ici_bps", 0.0)
             tiers = [
-                TierSpec("edge", prof.gamma, prof.network.bandwidth_bps),
-                TierSpec("cloud", 1.0),
+                TierSpec("edge", prof.gamma, prof.network.bandwidth_bps,
+                         devices=dev[0], ici_bps=ici),
+                TierSpec("cloud", 1.0, devices=dev[1], ici_bps=ici),
             ]
             plan = solve_multitier(
                 prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers,

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.calibration import calibrate_exit_probs
+from repro.launch.mesh import mesh_devices
 from repro.models import model as M
 from repro.serving.scheduler import ServesRequests
 from repro.serving.tiers import TierExecutor, TierStepResult, segments_for_cuts
@@ -70,15 +71,27 @@ class ServingEngine(ServesRequests):
     use_kernels: bool | None = None
     # Request-scheduler KV slots for the submit()/run()/drain() API.
     slots: int = 8
+    # Device mesh (+ optional explicit ShardingPolicy): run the trunk
+    # tensor/expert-parallel — see serving.tiers "Mesh-sharded tier
+    # segments".  Params/caches are placed by the executor.
+    mesh: Any = None
+    sharding: Any = None
 
     def __post_init__(self):
         cfg = self.cfg
-        self._prefill = jax.jit(
-            lambda params, inputs, caches: M.prefill(params, inputs, cfg, caches)
-        )
         self._exec = TierExecutor(
-            cfg, self.params, segments_for_cuts(cfg, ()),
+            cfg, self.params,
+            segments_for_cuts(
+                cfg, (), devices=(mesh_devices(self.mesh),) if self.mesh else None
+            ),
             use_kernels=self.use_kernels,
+            mesh=self.mesh, sharding=self.sharding,
+        )
+        # The executor owns the (possibly mesh-placed) param tree; prefill
+        # must run on the same placement.
+        self.params = self._exec.params
+        self._prefill = self._exec._jit(
+            lambda params, inputs, caches: M.prefill(params, inputs, cfg, caches)
         )
 
     @property
@@ -99,7 +112,9 @@ class ServingEngine(ServesRequests):
         prompt_len = inputs["tokens"].shape[1]
         if self.cfg.frontend == "vision":
             prompt_len += self.cfg.num_patches
-        caches = M.init_caches(self.cfg, batch, self.context_len)
+        caches = self._exec.shard_caches(
+            M.init_caches(self.cfg, batch, self.context_len)
+        )
         logits, caches = self._prefill(self.params, inputs, caches)
         return {
             "caches": caches,

@@ -70,6 +70,12 @@ class MultiTierServer(ServesRequests):
     bucket_headroom: float = 0.0  # fractional bucket padding vs retries
     slots: int = 8  # request-scheduler KV slots (submit/run/drain API)
     context_len: int = 4096  # scheduler cache capacity per slot
+    # Device mesh (+ optional explicit ShardingPolicy): segments run SPMD
+    # (serving.tiers "Mesh-sharded tier segments").  Which tier is priced
+    # as sharded lives in each TierSpec's ``devices``/``ici_bps``, carried
+    # into the segment specs and the lattice estimator.
+    mesh: Any = None
+    sharding: Any = None
 
     def __post_init__(self):
         self.tiers = tuple(self.tiers)
@@ -87,7 +93,10 @@ class MultiTierServer(ServesRequests):
             use_kernels=self.use_kernels,
             hint_window=self.hint_window,
             bucket_headroom=self.bucket_headroom,
+            mesh=self.mesh,
+            sharding=self.sharding,
         )
+        self.params = self.executor.params
 
     @classmethod
     def from_plan(
@@ -105,6 +114,7 @@ class MultiTierServer(ServesRequests):
             self.cfg, cuts,
             names=tuple(t.name for t in self.tiers),
             uplinks=tuple(t.uplink_bps for t in self.tiers),
+            devices=tuple(t.devices for t in self.tiers),
         )
 
     def install_cuts(self, cuts: Sequence[int]) -> None:

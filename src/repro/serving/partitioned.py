@@ -33,6 +33,7 @@ from repro.configs.base import ModelConfig
 from repro.core.latency import expected_time
 from repro.core.multitier import TierSpec, expected_time_multitier
 from repro.core.types import CostProfile, NetworkProfile
+from repro.launch.mesh import mesh_devices
 from repro.serving.scheduler import ServesRequests
 from repro.serving.tiers import (
     HopCompaction,
@@ -82,8 +83,23 @@ class PartitionedServer(ServesRequests):
     bucket_headroom: float = 0.0  # fractional bucket padding vs retries
     slots: int = 8  # request-scheduler KV slots (submit/run/drain API)
     context_len: int = 4096  # scheduler cache capacity per slot
+    # Device mesh (+ optional explicit ShardingPolicy): the cloud tier is
+    # a mesh slice, not a chip — segments run SPMD (serving.tiers
+    # "Mesh-sharded tier segments").  ``tier_devices`` is the (edge,
+    # cloud) shard width the estimator prices (None = derive (1, mesh
+    # size) from the mesh); ``ici_bps`` the cloud tier's intra-mesh
+    # interconnect for its collective term.
+    mesh: Any = None
+    sharding: Any = None
+    tier_devices: tuple[int, int] | None = None
+    ici_bps: float = 0.0
 
     def __post_init__(self):
+        if self.tier_devices is None:
+            self.tier_devices = (
+                (1, mesh_devices(self.mesh)) if self.mesh is not None
+                else (1, 1)
+            )
         self.executor = TierExecutor(
             self.cfg, self.params, self._segments(self.split_layer),
             compaction=self.compaction,
@@ -92,12 +108,16 @@ class PartitionedServer(ServesRequests):
             use_kernels=self.use_kernels,
             hint_window=self.hint_window,
             bucket_headroom=self.bucket_headroom,
+            mesh=self.mesh,
+            sharding=self.sharding,
         )
+        self.params = self.executor.params
 
     def _segments(self, s: int):
         return segments_for_cuts(
             self.cfg, (s,), names=("edge", "cloud"),
             uplinks=(self.network.bandwidth_bps,) if self.network else None,
+            devices=self.tier_devices,
         )
 
     def set_split(self, split_layer: int) -> None:
@@ -173,8 +193,10 @@ class PartitionedServer(ServesRequests):
         bucketed = self.compaction == "bucketed"
         if (bucketed or pipelined) and prof.network is not None:
             tiers = [
-                TierSpec("edge", prof.gamma, prof.network.bandwidth_bps),
-                TierSpec("cloud", 1.0),
+                TierSpec("edge", prof.gamma, prof.network.bandwidth_bps,
+                         devices=self.tier_devices[0], ici_bps=self.ici_bps),
+                TierSpec("cloud", 1.0,
+                         devices=self.tier_devices[1], ici_bps=self.ici_bps),
             ]
             return expected_time_multitier(
                 prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers, (s,),

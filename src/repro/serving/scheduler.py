@@ -173,7 +173,12 @@ class RequestScheduler:
         self.clock = clock
         self.on_step = list(on_step)
 
-        self.caches = M.init_caches(cfg, slots, context_len)
+        # Mesh-sharded executors place the slot caches under the policy's
+        # cache rules up front (no-op otherwise); admission prefill and
+        # decode steps then keep the layouts through propagation.
+        self.caches = self.executor.shard_caches(
+            M.init_caches(cfg, slots, context_len)
+        )
         self.pos = np.zeros(slots, np.int32)  # next decode position per slot
         self.active = np.zeros(slots, bool)
         self.tok_dev = jnp.zeros((slots, 1), jnp.int32)

@@ -145,6 +145,48 @@ one cut re-uses the jitted callables of every unchanged tier segment, and
 a survivor-count change *within* a bucket re-jits nothing
 (``trace_counts`` exposes this for tests).
 
+Mesh-sharded tier segments (``mesh`` / ``sharding``)
+----------------------------------------------------
+A tier in a production fleet is a pod slice, not a chip.  Passing a device
+``mesh`` (optionally with an explicit :class:`~repro.sharding.policy
+.ShardingPolicy`; default :func:`~repro.sharding.policy.make_policy`)
+turns every segment function into an SPMD program:
+
+  * **params** are placed once at construction under the policy's
+    per-architecture ``param_spec`` rules (attention heads / FFN hidden /
+    MoE expert dim / vocab on the ``model`` axis, FSDP over ``data`` where
+    configured, indivisible dims cleanly replicated);
+  * **KV/SSM caches** are placed by :meth:`TierExecutor.shard_caches`
+    (servers call it right after ``init_caches``) under ``cache_spec`` —
+    kv-heads on ``model`` when divisible, else head_dim; sharded layouts
+    then persist across decode steps through XLA's propagation;
+  * **activations** inside every segment fn are constrained through the
+    :mod:`repro.sharding.ctx` context, which the model stack's existing
+    ``constrain`` call sites pick up at trace time;
+  * **kernels** resolve to the pure-jnp lowering
+    (``resolve_use_kernels(..., sharded=True)``): the Pallas kernels are
+    single-device programs and must not see a mesh-global batch.
+
+The sharded-segment contract: every unsharded invariant holds — exactly
+one host sync per decode step, survivor compaction with the same bucket
+ladder, the (spec, bucket) segment cache (hot-swapping a cut never
+re-jits an unchanged sharded segment), per-request trajectory isolation —
+and the *token/exit-mask trajectory* matches the single-device runtime.
+Logits are not bitwise identical: SPMD partial-sum all-reduces reorder
+float accumulation, so equivalence is at the argmax/threshold-decision
+level (the sharded equivalence tests pin exact token and exit-mask
+trajectories over full decode runs).
+
+On one host every segment shares the same mesh (the single-host SPMD
+caveat, like the pipelined-overlap one above): "which tier is sharded" is
+a cost-model property carried by ``TierSegment.devices`` /
+``TierSpec.devices``.  The cost model prices a sharded tier as per-layer
+compute scaled ``1/devices`` plus an intra-tier ring-all-reduce term
+``2 * 2*(d-1)/d * alpha_i / ici_bps`` per layer (two collectives — the
+attention-out and MLP-down partial sums), so ``solve_multitier`` can
+trade "shard tier j over d chips" against "add a hop"; see
+:mod:`repro.core.multitier`.
+
 Continuous batching (request slots)
 -----------------------------------
 The executor also serves as the data plane of the request scheduler
@@ -186,7 +228,10 @@ from repro.configs.base import ModelConfig
 from repro.core.calibration import normalized_entropy
 from repro.core.multitier import bucket_for, bucket_ladder
 from repro.kernels import ops as kernel_ops
+from repro.launch.mesh import mesh_devices
 from repro.models.layers import norm_apply
+from repro.sharding.ctx import activation_sharding
+from repro.sharding.policy import make_policy
 from repro.models.model import (
     _branch_logits,
     _unembed,
@@ -216,13 +261,17 @@ TOKEN_ID_BYTES = 4.0
 class TierSegment:
     """One tier's share of the trunk: layers ``[layer_lo, layer_hi)``
     (absolute, 0-based), the 1-based branch collect points it evaluates,
-    and the uplink to the next tier (bits/s; ``None`` on the last tier)."""
+    the uplink to the next tier (bits/s; ``None`` on the last tier), and
+    the tier's shard width (``devices > 1`` = the tier is a mesh slice;
+    carried into the segment-fn cache key so a repartition that changes a
+    tier's width recompiles exactly that tier)."""
 
     name: str
     layer_lo: int
     layer_hi: int
     branches: tuple[int, ...] = ()
     uplink_bps: float | None = None
+    devices: int = 1
 
     @property
     def is_empty(self) -> bool:
@@ -230,7 +279,8 @@ class TierSegment:
 
     def spec(self, head: bool) -> tuple:
         """Cache key for the compiled segment function."""
-        return (self.layer_lo, self.layer_hi, self.branches, head)
+        return (self.layer_lo, self.layer_hi, self.branches, head,
+                self.devices)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +320,7 @@ def segments_for_cuts(
     *,
     names: Sequence[str] | None = None,
     uplinks: Sequence[float] | None = None,
+    devices: Sequence[int] | None = None,
 ) -> tuple[TierSegment, ...]:
     """Generic plan -> runtime adapter: monotone 1-based cut points
     ``(c_1 .. c_{K-1})`` become K :class:`TierSegment` specs.
@@ -297,7 +348,10 @@ def segments_for_cuts(
             )
         name = names[j] if names else f"tier{j}"
         up = uplinks[j] if uplinks and j < len(uplinks) else None
-        segs.append(TierSegment(name, lo, hi, brs, up if j < k - 1 else None))
+        dev = int(devices[j]) if devices and j < len(devices) else 1
+        segs.append(
+            TierSegment(name, lo, hi, brs, up if j < k - 1 else None, dev)
+        )
     return tuple(segs)
 
 
@@ -369,6 +423,13 @@ class TierExecutor:
     downstream tier's bucket from the max survivor count of the last
     ``hint_window`` steps, inflated by ``bucket_headroom`` (fractional;
     see the module docstring).
+
+    ``mesh`` / ``sharding``: execute the segment fns SPMD across a device
+    mesh (see the module docstring's sharded-segment contract).  Params
+    are placed at construction; callers place caches through
+    :meth:`shard_caches`.  ``sharding=None`` derives the policy via
+    :func:`~repro.sharding.policy.make_policy`.  A 1-device mesh is
+    treated as unsharded.
     """
 
     def __init__(
@@ -383,6 +444,8 @@ class TierExecutor:
         use_kernels: bool | None = None,
         hint_window: int = 8,
         bucket_headroom: float = 0.0,
+        mesh: Any = None,
+        sharding: Any = None,
     ):
         if compaction not in ("bucketed", "off"):
             raise ValueError(f"unknown compaction mode: {compaction!r}")
@@ -393,12 +456,21 @@ class TierExecutor:
         if bucket_headroom < 0.0:
             raise ValueError(f"bucket_headroom must be >= 0: {bucket_headroom}")
         self.cfg = cfg
+        self.mesh = mesh
+        self.sharded = mesh is not None and mesh_devices(mesh) > 1
+        self.policy = None
+        if self.sharded:
+            self.policy = (
+                sharding if sharding is not None else make_policy(mesh, cfg)
+            )
+            params = self.policy.shard_params(params)
         self.params = params
         self.compaction = compaction
         self.simulate_network = simulate_network
         self.overlap = overlap
         self.use_kernels = kernel_ops.resolve_use_kernels(
-            cfg.use_kernels if use_kernels is None else use_kernels
+            cfg.use_kernels if use_kernels is None else use_kernels,
+            sharded=self.sharded,
         )
         self.hint_window = hint_window
         self.bucket_headroom = bucket_headroom
@@ -468,6 +540,32 @@ class TierExecutor:
         """The compiled full-batch callable for segment ``index``
         (None if the segment is empty)."""
         return self._fns[index]
+
+    # ---------------------------------------------------------- sharding
+    def shard_caches(self, caches: Any) -> Any:
+        """Place a freshly initialized cache pytree per the sharding
+        policy's cache rules (no-op when the executor has no mesh).
+        Servers call this once right after ``init_caches``; the layouts
+        then persist across decode steps through XLA's propagation."""
+        if not self.sharded:
+            return caches
+        return self.policy.shard_caches(caches)
+
+    def _jit(self, fn):
+        """``jax.jit`` with the executor's activation-sharding context
+        active at trace time (jit executes the traced body once), so the
+        model stack's ``constrain`` call sites emit real constraints on a
+        sharded executor and stay no-ops otherwise."""
+        if not self.sharded:
+            return jax.jit(fn)
+        pol = self.policy
+
+        def traced(*args):
+            with activation_sharding(pol.mesh, pol.batch_axes,
+                                     pol.model_axis):
+                return fn(*args)
+
+        return jax.jit(traced)
 
     def _segment_fn(
         self,
@@ -655,7 +753,7 @@ class TierExecutor:
                     )
             return out
 
-        jitted = jax.jit(fn)
+        jitted = self._jit(fn)
         self._fn_cache[key] = jitted
         return jitted
 
@@ -723,7 +821,7 @@ class TierExecutor:
                 tok0 = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
                 return tok0, new_caches
 
-            fn = jax.jit(prefill_fn)
+            fn = self._jit(prefill_fn)
             self._fn_cache[key] = fn
         tok0, caches = fn(
             self.params, tokens, jnp.asarray(rows, jnp.int32), caches

@@ -230,6 +230,18 @@ class ShardingPolicy:
             out.append(NamedSharding(self.mesh, self.cache_spec(path, leaf.shape)))
         return jax.tree_util.tree_unflatten(treedef, out)
 
+    # ------------------------------------------------------------ placement
+    def shard_params(self, params) -> Any:
+        """Place a concrete param pytree per :meth:`param_spec` (the serving
+        entry point: ``TierExecutor`` calls this once at construction)."""
+        return jax.device_put(params, self.params_shardings(params))
+
+    def shard_caches(self, caches) -> Any:
+        """Place a concrete cache pytree per :meth:`cache_spec`.  Serving
+        callers run it on freshly initialized caches; sharded decode steps
+        then keep the layouts through XLA's propagation."""
+        return jax.device_put(caches, self.cache_shardings(caches))
+
     # ------------------------------------------------------------ optimizer
     def opt_state_shardings(self, params_shapes, optimizer_name: str) -> Any:
         """Shardings for the optimizer state pytree.

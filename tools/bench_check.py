@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Benchmark regression check: diff a BENCH_*.json bundle against the
+last committed one.
+
+Usage::
+
+    python tools/bench_check.py BENCH_serving.json [BENCH_kernels.json ...]
+
+For each bundle, the baseline is ``git show <ref>:<file>`` (ref from
+``REPRO_BENCH_REF``, default HEAD).  Per cell:
+
+  * cells whose ``config`` differs from the baseline's are skipped (a
+    fast-mode run is never diffed against a full-mode baseline);
+  * ``strict`` metrics must match exactly — these are structure-derived
+    (host syncs/step, decode-step counts, analytic FLOPs, solver cuts)
+    and only change when the code changes;
+  * ``timing`` metrics are wall-clock: a value more than
+    ``REPRO_BENCH_TOL``x the baseline (default 3.0 — CI hosts are noisy)
+    is flagged as a regression.  Faster is never flagged.
+
+Exit status: 0 = clean (including "no committed baseline yet" — the
+first run seeds the trajectory); 1 = strict mismatch or timing
+regression.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+TOL = float(os.environ.get("REPRO_BENCH_TOL", "3.0"))
+REF = os.environ.get("REPRO_BENCH_REF", "HEAD")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def committed(relpath: str) -> dict | None:
+    out = subprocess.run(
+        ["git", "show", f"{REF}:{relpath}"],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+    )
+    if out.returncode != 0:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def check_bundle(path: str) -> list[str]:
+    """Returns a list of human-readable problems (empty = clean)."""
+    rel = os.path.relpath(os.path.abspath(path), REPO_ROOT)
+    with open(path) as f:
+        cur = json.load(f)
+    base = committed(rel)
+    if base is None:
+        print(f"{rel}: no committed baseline at {REF} — seeding trajectory")
+        return []
+    problems: list[str] = []
+    compared = skipped = 0
+    for name, cell in cur.get("cells", {}).items():
+        ref_cell = base.get("cells", {}).get(name)
+        if ref_cell is None:
+            continue  # new cell: nothing to diff against
+        if cell.get("config") != ref_cell.get("config"):
+            skipped += 1
+            continue
+        compared += 1
+        for key, want in ref_cell.get("strict", {}).items():
+            got = cell.get("strict", {}).get(key)
+            if got != want:
+                problems.append(
+                    f"{rel}:{name}: strict metric {key!r} changed: "
+                    f"{want!r} -> {got!r}"
+                )
+        for key, want in ref_cell.get("timing", {}).items():
+            got = cell.get("timing", {}).get(key)
+            if not isinstance(got, (int, float)) or not isinstance(
+                want, (int, float)
+            ):
+                continue
+            if want > 0 and got > want * TOL:
+                problems.append(
+                    f"{rel}:{name}: timing {key!r} regressed "
+                    f"{got / want:.2f}x (tol {TOL}x): {want:.3f} -> {got:.3f}"
+                )
+    print(f"{rel}: {compared} cells compared vs {base.get('git_sha', '?')[:12]}"
+          f", {skipped} skipped (config changed), {len(problems)} problems")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["BENCH_serving.json", "BENCH_kernels.json"]
+    problems: list[str] = []
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"{p}: not found (benchmark did not emit a bundle?)")
+            problems.append(f"{p}: missing bundle")
+            continue
+        problems += check_bundle(p)
+    for msg in problems:
+        print(f"REGRESSION: {msg}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

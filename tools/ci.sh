@@ -10,14 +10,35 @@
 # `make bench-requests` selects it alone), and every Pallas kernel path
 # (interpret mode off-TPU, identical-trajectory assert inline) are
 # exercised end to end on every CI pass.
+# A second pytest process then runs the multi-device lane: XLA_FLAGS
+# must create the 8 virtual CPU devices *before jax initializes*, so the
+# sharded-tier equivalence tests (tests/test_sharded_tiers.py — SPMD
+# trajectory identity, 1-sync invariant, policy lowering across all
+# configs) cannot share the first process.  The lane runs the *whole*
+# suite under the 8-device mesh — the existing tier-1 tests double as a
+# does-everything-still-hold-with-devices-visible check (they pass
+# unchanged; only mesh-marked tests actually shard anything).
 # Usage: tools/ci.sh [extra pytest args]
 #   REPRO_CI_BENCH=0 skips the benchmark smokes (pytest only).
+#   REPRO_CI_SHARDED=0 skips the multi-device lane;
+#   REPRO_CI_SHARDED=fast restricts it to tests/test_sharded_tiers.py.
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+if [ "${REPRO_CI_SHARDED:-1}" != "0" ]; then
+    if [ "${REPRO_CI_SHARDED:-1}" = "fast" ]; then
+        sharded_targets="tests/test_sharded_tiers.py"
+    else
+        sharded_targets=""
+    fi
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m pytest -x -q $sharded_targets
+fi
 if [ "${REPRO_CI_BENCH:-1}" != "0" ]; then
     REPRO_BENCH_FAST=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python benchmarks/serving_step.py
     REPRO_BENCH_FAST=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python benchmarks/kernel_micro.py
+    python tools/bench_check.py BENCH_serving.json BENCH_kernels.json
 fi
