@@ -1,6 +1,6 @@
 PY := python
 
-.PHONY: test test-fast test-sharded bench-serving bench-serving-fast bench-overlap bench-requests bench-kernels bench-kernels-full bench-check example
+.PHONY: test test-fast test-sharded bench-serving bench-serving-fast bench-overlap bench-requests bench-faults bench-kernels bench-kernels-full bench-check example
 
 # Tier-1 verify (ROADMAP): the full suite with the src layout on the path.
 test:
@@ -33,6 +33,13 @@ bench-overlap:
 # beats gang (lock-step) tokens/sec at one host sync per decode step.
 bench-requests:
 	REPRO_BENCH_FAST=1 REPRO_BENCH_ONLY=requests PYTHONPATH=src $(PY) benchmarks/serving_step.py
+
+# Fault-plane cell only: scripted mid-run link flap on a K=3 stack ->
+# retries, breaker open, degraded tokens from the fallback head, and an
+# availability re-solve that moves the cut off the sick hop.  Asserts
+# every request completes with no leaked KV slots.
+bench-faults:
+	REPRO_BENCH_FAST=1 REPRO_BENCH_ONLY=faults PYTHONPATH=src $(PY) benchmarks/serving_step.py
 
 # Kernel-vs-jnp decode hot path sweep (flash_decode / fused exit decision /
 # ssd_update / end-to-end TierExecutor step) in CI smoke mode: tiny shapes,

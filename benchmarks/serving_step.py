@@ -36,10 +36,20 @@ steps: the cell reports tokens/sec and p50/p95 TTFT per policy and
 asserts continuous > lock-step throughput at one host sync per decode
 step.
 
+Part 5 (faults): a scripted mid-run link flap on hop 1 of a K=3 serving
+stack with the fault plane armed (seeded LinkFaultModel + HopPolicy) and
+a RepartitionController ingesting hop health.  Retries exhaust, the
+breaker opens, survivors finalize from the deepest exit head below the
+broken hop (degraded tokens — still real tokens), and the controller
+re-solves to cuts that ship zero bytes on the sick link.  The cell
+reports tokens/sec, the degraded-token fraction, and the fault re-solve
+count, and asserts every request completes with no leaked KV slots.
+
 Run:  PYTHONPATH=src python benchmarks/serving_step.py
 Fast CI smoke:  REPRO_BENCH_FAST=1 PYTHONPATH=src python benchmarks/serving_step.py
 Overlap cell only:  REPRO_BENCH_ONLY=overlap PYTHONPATH=src python benchmarks/serving_step.py
 Request cell only:  REPRO_BENCH_ONLY=requests PYTHONPATH=src python benchmarks/serving_step.py
+Fault cell only:  REPRO_BENCH_ONLY=faults PYTHONPATH=src python benchmarks/serving_step.py
 """
 
 import dataclasses
@@ -52,9 +62,18 @@ import numpy as np
 
 from bench_io import BenchBundle
 from repro.configs import get_smoke_config
+from repro.core import LayerCost, build_cost_profile
 from repro.core.multitier import TierSpec, expected_time_multitier, solve_multitier
 from repro.models import model as M
-from repro.serving import MultiTierServer, PartitionedServer, RequestScheduler
+from repro.serving import (
+    FlapWindow,
+    HopPolicy,
+    LinkFaultModel,
+    MultiTierServer,
+    PartitionedServer,
+    RepartitionController,
+    RequestScheduler,
+)
 
 FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
 ONLY = os.environ.get("REPRO_BENCH_ONLY", "")
@@ -529,6 +548,90 @@ def part4_continuous_batching(cfg0, params, bundle):
         )
 
 
+def part5_faults(cfg0, params, bundle):
+    print("\n== fault plane: scripted link flap -> degraded tokens + "
+          "availability re-solve ==")
+    cfg = dataclasses.replace(
+        cfg0, exit_threshold=_mixed_threshold(cfg0, params)
+    )
+    slots = 4
+    n_req = 8 if FAST else 24
+    tiers = [
+        TierSpec("edge", 4.0, 1e9),
+        TierSpec("mid", 2.0, 1e9),
+        TierSpec("cloud", 1.0),
+    ]
+    fault_model = LinkFaultModel(
+        seed=0, flaps=(FlapWindow(hop=1, start_step=6, end_step=10_000),)
+    )
+    policy = HopPolicy(
+        timeout_s=0.02, max_retries=1, backoff_s=0.002,
+        breaker_threshold=2, breaker_cooldown_steps=3,
+    )
+    srv = MultiTierServer(
+        cfg, params, tiers, (1, 3), simulate_network=True,
+        slots=slots, context_len=CONTEXT,
+        fault_model=fault_model, hop_policy=policy,
+    )
+    costs = [LayerCost(f"l{i}", 0, 0, cfg.d_model * 2.0, 1e-3)
+             for i in range(cfg.num_layers)]
+    profile = build_cost_profile(
+        costs, cfg.branch_layers, np.array([0.2, 0.2]), "3g", 50.0, 64.0
+    )
+    ctl = RepartitionController(srv, profile, tiers=list(tiers))
+    work = _request_workload(cfg, n_req, seed=3)
+
+    sched = RequestScheduler(srv, slots, CONTEXT, on_step=[ctl.observe])
+    t0 = time.perf_counter()
+    for w in work:
+        sched.submit(w["prompt"], w["max_new_tokens"],
+                     stop_on_exit=w["stop_on_exit"],
+                     arrival_step=w["arrival_step"])
+    results = sched.drain()
+    dt = time.perf_counter() - t0
+
+    tokens = sched.total_tokens
+    degraded_tokens = sum(r.degraded_tokens for r in results)
+    deg_frac = degraded_tokens / max(tokens, 1)
+    ex = srv.executor
+    print(f"requests {len(results)}  tokens {tokens}  "
+          f"tok/s {tokens / dt:.1f}")
+    print(f"degraded tokens {degraded_tokens} ({deg_frac:.1%})  "
+          f"degraded steps {ex.degraded_steps}  retries {ex.fault_retries}")
+    print(f"fault re-solves {ctl.fault_resolves}  cuts now {srv.cuts}  "
+          f"hop health {ctl.hop_health()}")
+    assert len(results) == n_req and all(r.done for r in results), \
+        "every request must complete despite the dead link"
+    assert {r.status for r in results} <= {"ok", "degraded"}
+    assert degraded_tokens > 0, "the flap must force degraded tokens"
+    assert ctl.fault_resolves >= 1, "breaker-open must trigger a re-solve"
+    assert srv.cuts[1] == cfg.num_layers, \
+        "the re-solved plan must ship nothing on the sick hop"
+    assert sched.active.sum() == 0 and all(
+        r is None for r in sched._slot_req
+    ), "no leaked KV slots"
+    print(f"OK: {n_req} requests survived a hop-1 kill — {deg_frac:.1%} of "
+          f"tokens finalized from the fallback head, "
+          f"{ctl.fault_resolves} availability re-solve(s)")
+    bundle.cell(
+        "faults",
+        config=dict(slots=slots, requests=n_req, flap_hop=1,
+                    flap_start=6, fast=FAST),
+        strict=dict(
+            requests_done=len(results),
+            failed_requests=sum(r.status == "failed" for r in results),
+            fault_resolves=ctl.fault_resolves,
+            sick_hop_bytes_after_resolve=0.0,
+        ),
+        timing=dict(
+            tokens_per_s=tokens / dt,
+            degraded_token_frac=deg_frac,
+            degraded_steps=ex.degraded_steps,
+            fault_retries=ex.fault_retries,
+        ),
+    )
+
+
 def main() -> None:
     cfg = dataclasses.replace(
         get_smoke_config("qwen3_8b"), num_layers=4, branch_layers=(1, 3)
@@ -546,10 +649,14 @@ def main() -> None:
         if ONLY == "requests":
             part4_continuous_batching(cfg, params, bundle)
             return
+        if ONLY == "faults":
+            part5_faults(cfg, params, bundle)
+            return
         part1_legacy_vs_fused(cfg, params, bundle)
         part2_roofline_sweep(cfg, params, bundle)
         part3_overlap_pipeline(cfg, params, bundle)
         part4_continuous_batching(cfg, params, bundle)
+        part5_faults(cfg, params, bundle)
     finally:
         print(f"\nwrote {bundle.write()}")
 

@@ -240,6 +240,49 @@ def main() -> None:
           f"served later arrivals with bitwise-solo trajectories "
           f"(tests/test_scheduler.py pins the invariant)")
 
+    # ---- fault plane: mid-run link kill with graceful degradation.  A
+    # scripted flap takes the edge->cloud hop down; retries exhaust, the
+    # circuit breaker opens, and survivors finalize from the deepest exit
+    # head below the broken hop (tokens still emit, flagged degraded).
+    # The controller ingests the breaker event and re-solves with the
+    # hop's availability at 0 — the new cuts ship nothing across it.
+    from repro.serving import (
+        FlapWindow, HopPolicy, LinkFaultModel, RepartitionController,
+        RequestScheduler,
+    )
+    fault_tiers = [
+        TierSpec("edge", 12.0, uplink_bps=18.8e6),
+        TierSpec("mid", 4.0, uplink_bps=5.85e6),
+        TierSpec("cloud", 1.0),
+    ]
+    srvf = MultiTierServer(
+        cfg, params, fault_tiers, (1, 3), simulate_network=True,
+        slots=6, context_len=CONTEXT,
+        fault_model=LinkFaultModel(
+            seed=0, flaps=(FlapWindow(hop=1, start_step=6, end_step=10_000),)
+        ),
+        hop_policy=HopPolicy(timeout_s=0.02, max_retries=1,
+                             backoff_s=0.002, breaker_threshold=2),
+    )
+    ctl = RepartitionController(srvf, profile, tiers=list(fault_tiers))
+    schedf = RequestScheduler(srvf, 6, CONTEXT, on_step=[ctl.observe])
+    for i in range(10):
+        plen = int(rng.choice((8, 16)))
+        schedf.submit(rng.integers(0, cfg.vocab_size, size=plen),
+                      int(rng.integers(3, 10)), arrival_step=i)
+    resultsf = schedf.drain()
+    deg = sum(r.degraded_tokens for r in resultsf)
+    print(f"\n== fault plane: hop mid->cloud killed at step 6 — "
+          f"{len(resultsf)} requests still completed "
+          f"({deg}/{schedf.total_tokens} tokens degraded via the fallback "
+          f"head, {srvf.executor.fault_retries} retries)")
+    print(f"   controller: {ctl.fault_resolves} availability re-solve(s), "
+          f"cuts now {srvf.cuts}, hop health {ctl.hop_health()}")
+    assert all(r.done for r in resultsf)
+    assert ctl.fault_resolves >= 1 and srvf.cuts[1] == cfg.num_layers
+    print("   every request completed despite the dead link — "
+          "tests/test_faults.py pins the degraded-step contract")
+
 
 if __name__ == "__main__":
     main()

@@ -109,6 +109,14 @@ class TierSpec:
     uplink_bps: float = 0.0
     devices: int = 1  # shard width (tensor/expert-parallel fan-out)
     ici_bps: float = 0.0  # intra-tier interconnect (per-device, bits/s)
+    #: Uplink health: the estimated probability a transfer over this
+    #: tier's uplink succeeds (the controller feeds its EWMA of observed
+    #: fault events here).  A flaky hop's expected cost scales
+    #: ``1/availability`` (retries until success); ``availability <= 0``
+    #: — a breaker-open link — prices the hop infinite, so the solver
+    #: routes the cut around a sick link exactly as it routes around a
+    #: dead one.
+    availability: float = 1.0
 
 
 #: All-reduces a sharded trunk layer pays on its activation (attention wo
@@ -154,15 +162,22 @@ def _padded_frac(reach_i: float, batch: int) -> float:
     return bucket_for(n, batch) / batch
 
 
-def _hop_seconds(bits: float, uplink_bps: float) -> float:
+def _hop_seconds(
+    bits: float, uplink_bps: float, availability: float = 1.0
+) -> float:
     """Transfer seconds for ``bits`` over a hop.  A hop that ships nothing
-    is free; a hop that ships over an unset/zero uplink is unusable
-    (infinite cost), never a ZeroDivisionError."""
+    is free; a hop that ships over an unset/zero uplink — or one whose
+    estimated ``availability`` is zero (breaker open) — is unusable
+    (infinite cost), never a ZeroDivisionError.  A flaky-but-alive hop
+    costs ``1/availability`` times its raw transfer (expected attempts
+    until one succeeds under i.i.d. failures)."""
     if bits <= 0.0:
         return 0.0
     if not uplink_bps or uplink_bps <= 0.0:
         return math.inf
-    return bits / uplink_bps
+    if availability <= 0.0:
+        return math.inf
+    return bits / uplink_bps / min(float(availability), 1.0)
 
 
 def _infeasible_error(tiers: list[TierSpec]) -> ValueError:
@@ -170,13 +185,15 @@ def _infeasible_error(tiers: list[TierSpec]) -> ValueError:
     unreachable tier when a dead uplink is the culprit."""
     dead = next(
         (j for j in range(len(tiers) - 1)
-         if not tiers[j].uplink_bps or tiers[j].uplink_bps <= 0.0),
+         if not tiers[j].uplink_bps or tiers[j].uplink_bps <= 0.0
+         or tiers[j].availability <= 0.0),
         None,
     )
     detail = (
         f"tier {tiers[dead + 1].name!r} is unreachable "
         f"(tier {tiers[dead].name!r} has uplink_bps="
-        f"{tiers[dead].uplink_bps!r})"
+        f"{tiers[dead].uplink_bps!r}, availability="
+        f"{tiers[dead].availability!r})"
         if dead is not None
         else "check the t_c/alpha/gamma profile for infs or NaNs"
     )
@@ -314,7 +331,8 @@ def solve_multitier(
     dist[0][0] = 0.0
     for j in range(1, last):
         cand = dist[0][j - 1] + _hop_seconds(
-            occ * alpha[0] * 8.0, tiers[j - 1].uplink_bps
+            occ * alpha[0] * 8.0, tiers[j - 1].uplink_bps,
+            tiers[j - 1].availability,
         )
         if cand < dist[0][j]:
             dist[0][j] = cand
@@ -329,7 +347,8 @@ def solve_multitier(
                 parent[i][j] = (i - 1, j)
         for j in range(1, last):
             cand = dist[i][j - 1] + _hop_seconds(
-                occ * reach[i] * alpha[i] * 8.0, tiers[j - 1].uplink_bps
+                occ * reach[i] * alpha[i] * 8.0, tiers[j - 1].uplink_bps,
+                tiers[j - 1].availability,
             )
             if cand < dist[i][j]:
                 dist[i][j] = cand
@@ -359,6 +378,7 @@ def solve_multitier(
                 _hop_seconds(
                     occ * reach[i] * alpha[i] * 8.0,
                     tiers[last - 1].uplink_bps,
+                    tiers[last - 1].availability,
                 )
                 + tail_w * tail[i]
             )
@@ -477,7 +497,8 @@ def expected_time_multitier(
         c = bounds[j + 1]
         if c < n:  # layers still run downstream -> the hop really happens
             xfer[j] = _hop_seconds(
-                occ * reach[c] * alpha[c] * 8.0, tiers[j].uplink_bps
+                occ * reach[c] * alpha[c] * 8.0, tiers[j].uplink_bps,
+                tiers[j].availability,
             )
     if overlap:
         return float(max(compute + xfer))

@@ -7,10 +7,20 @@
     RepartitionController        live p_k -> solver -> hot swap
     RequestScheduler             continuous-batching request lifecycle
                                  (submit/run/drain over recycled KV slots)
+    LinkFaultModel / HopPolicy   seeded hop fault injection + retry/breaker
+                                 policy (degraded steps, edge fallback)
 """
 
 from repro.serving.controller import RepartitionController
 from repro.serving.engine import ExitStats, ServingEngine
+from repro.serving.faults import (
+    CircuitBreaker,
+    FaultEvent,
+    FlapWindow,
+    HopPolicy,
+    LinkDownError,
+    LinkFaultModel,
+)
 from repro.serving.multitier import MultiTierServer, MultiTierStepReport
 from repro.serving.partitioned import PartitionedServer, StepReport
 from repro.serving.scheduler import (
@@ -46,4 +56,10 @@ __all__ = [
     "TierStepResult",
     "bytes_per_sequence",
     "segments_for_cuts",
+    "CircuitBreaker",
+    "FaultEvent",
+    "FlapWindow",
+    "HopPolicy",
+    "LinkDownError",
+    "LinkFaultModel",
 ]

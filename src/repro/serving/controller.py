@@ -37,6 +37,22 @@ controller prices the steady-state live batch, not the nominal one.
 ``probe_sample_frac`` makes epsilon probes evaluate the extra branch
 heads on a sampled sub-batch; the executor reports which rows were
 covered and the window stays unbiased.
+
+Hop health (fault plane): when the server runs with a
+``LinkFaultModel`` attached, step reports carry ``fault_events`` and a
+``degraded_hop``.  ``observe()`` ingests them into per-hop EWMAs —
+availability (success fraction of *attempted* hops) and observed
+transfer seconds — and, on a breaker state change (a hop's circuit
+opening or closing), immediately re-solves with each hop's ``TierSpec``
+availability set from the EWMA (0 for a breaker-open hop, which the
+solver prices as an unusable link).  The re-solve goes through
+``update_tiers`` / the lattice route, so the drift window resets and the
+new plan moves the cut off the sick hop.  A hop the breaker skipped is
+*not* an observation (no EWMA update), and a failed half-open probe
+updates availability only — never the transfer-time EWMA — so breaker
+probing cannot corrupt the cost estimates.  ``fault_resolve=False``
+keeps the ingestion but disables the automatic re-solve (call
+``apply_hop_health()`` explicitly).
 """
 
 from __future__ import annotations
@@ -108,6 +124,11 @@ class RepartitionController:
     # (None = track the live width from observed step reports).  Solves
     # price the occupancy-weighted expected batch, not the nominal one.
     occupancy: float | None = None
+    # Hop-health ingestion (fault plane): EWMA smoothing factor for the
+    # per-hop availability / observed-transfer estimates, and whether a
+    # breaker state change triggers an automatic availability re-solve.
+    hop_alpha: float = 0.3
+    fault_resolve: bool = True
 
     def __post_init__(self):
         if isinstance(self.server, MultiTierServer) and self.tiers is None:
@@ -133,6 +154,18 @@ class RepartitionController:
         # Decaying estimate of the live fraction (continuous batching);
         # lock-step reports keep it at 1.
         self._occ_est: float | None = None
+        # Per-hop health state (fault plane).  Keyed by hop index (tier
+        # boundary j, stable across repartitions).  ``_hop_avail`` is the
+        # EWMA success fraction over *attempted* hops (breaker-skipped
+        # hops are not observations); ``_hop_xfer`` the EWMA of observed
+        # per-hop simulated transfer seconds over successful non-empty
+        # shipments only (a failed half-open probe never touches it);
+        # ``_hop_open`` the hops whose breaker is currently open (priced
+        # as availability 0 by re-solves).
+        self._hop_avail: dict[int, float] = {}
+        self._hop_xfer: dict[int, float] = {}
+        self._hop_open: set[int] = set()
+        self.fault_resolves = 0
 
     # ------------------------------------------------------------ solving
     def _solve_occupancy(self) -> float | None:
@@ -166,7 +199,8 @@ class RepartitionController:
             self.batch is not None
             and getattr(self.server, "compaction", "off") == "bucketed"
         )
-        if overlap or bucketed:
+        avail = 0.0 if 0 in self._hop_open else self._hop_avail.get(0, 1.0)
+        if overlap or bucketed or avail < 1.0:
             # 2-tier pipelined and/or bucketed: the paper's Dijkstra
             # minimizes the ideal serial sum; route through the unified
             # lattice cost instead so the installed cut optimizes the same
@@ -177,11 +211,15 @@ class RepartitionController:
             # optimized without the gamma * t_b edge terms here.  A
             # mesh-sharded server's shard widths / interconnect carry into
             # the specs so re-solves price the sharded cloud tier.
+            # Degraded uplink health routes the 2-tier solve through the
+            # lattice as well: the edge spec carries the EWMA availability
+            # (0 = breaker open), which _hop_seconds prices as a slower —
+            # or unusable — link, pushing the cut toward all-edge.
             dev = getattr(self.server, "tier_devices", None) or (1, 1)
             ici = getattr(self.server, "ici_bps", 0.0)
             tiers = [
                 TierSpec("edge", prof.gamma, prof.network.bandwidth_bps,
-                         devices=dev[0], ici_bps=ici),
+                         devices=dev[0], ici_bps=ici, availability=avail),
                 TierSpec("cloud", 1.0, devices=dev[1], ici_bps=ici),
             ]
             plan = solve_multitier(
@@ -278,9 +316,108 @@ class RepartitionController:
             self._arrivals *= 0.5
             self._exits *= 0.5
             self._window_age = 0
+        fault_cuts = self._ingest_faults(report)
+        if fault_cuts is not None:
+            # A breaker state change re-solved and swapped the plan (which
+            # also reset the drift window); it takes precedence over the
+            # periodic drift check this step.
+            return fault_cuts
         if self.every_n_steps and self._steps_observed % self.every_n_steps == 0:
             return self.maybe_update()
         return None
+
+    # -------------------------------------------------------- hop health
+    def _ingest_faults(self, report) -> tuple[int, ...] | None:
+        """Fold one step's fault-plane outputs into the per-hop health
+        EWMAs; re-solve (availability-aware) on a breaker state change.
+
+        Only *attempted* hops are observations: a hop the breaker skipped
+        (``breaker_skip`` event), and hops downstream of the broken one
+        (never dispatched), leave both EWMAs untouched.  Transfer seconds
+        are ingested only from successful non-empty shipments, so a failed
+        half-open probe moves availability but can never corrupt the
+        transfer-time estimate.
+        """
+        events = getattr(report, "fault_events", None)
+        if not events and getattr(report, "degraded_hop", None) is None:
+            return None
+        events = events or ()
+        broken = getattr(report, "degraded_hop", None)
+        skipped = {e.hop for e in events if e.kind == "breaker_skip"}
+        failed_hops = {e.hop for e in events if e.kind == "exhausted"}
+        nb = getattr(report, "bytes_per_hop", ()) or ()
+        sim = getattr(report, "sim_transfer_s", ()) or ()
+        a = self.hop_alpha
+        for j in range(len(nb)):
+            if j in skipped or (broken is not None and j > broken):
+                continue  # not attempted: no observation
+            ok = j not in failed_hops
+            prev = self._hop_avail.get(j, 1.0)
+            self._hop_avail[j] = (1.0 - a) * prev + a * (1.0 if ok else 0.0)
+            if ok and float(nb[j]) > 0 and j < len(sim) and sim[j] > 0:
+                prev_x = self._hop_xfer.get(j)
+                self._hop_xfer[j] = (
+                    float(sim[j]) if prev_x is None
+                    else (1.0 - a) * prev_x + a * float(sim[j])
+                )
+        resolve = False
+        for e in events:
+            if e.kind == "breaker_open" and e.hop not in self._hop_open:
+                self._hop_open.add(e.hop)
+                resolve = True
+            elif e.kind == "breaker_closed" and e.hop in self._hop_open:
+                self._hop_open.discard(e.hop)
+                # The link recovered: forgive the failure history so the
+                # re-solve prices it healthy instead of replaying the EWMA
+                # tail of the outage.
+                self._hop_avail[e.hop] = 1.0
+                resolve = True
+        if resolve and self.fault_resolve:
+            return self.apply_hop_health()
+        return None
+
+    def hop_health(self) -> dict[int, dict[str, float | bool]]:
+        """Per-hop health snapshot: availability EWMA, observed-transfer
+        EWMA (None until a successful shipment), breaker-open flag."""
+        hops = set(self._hop_avail) | set(self._hop_xfer) | self._hop_open
+        return {
+            j: {
+                "availability": self._hop_avail.get(j, 1.0),
+                "transfer_s": self._hop_xfer.get(j),
+                "open": j in self._hop_open,
+            }
+            for j in sorted(hops)
+        }
+
+    def apply_hop_health(self) -> tuple[int, ...]:
+        """Re-solve with each hop's ``TierSpec.availability`` set from the
+        health EWMAs (0 for a breaker-open hop) and hot-swap the result.
+        Fires automatically on breaker state changes when
+        ``fault_resolve`` is set; callable explicitly otherwise.
+
+        The K>=3 path goes through :meth:`update_tiers`, so the drift
+        window resets exactly as it does for any topology change.  Note
+        that once the re-solve moves the cut off a sick hop, that hop is
+        no longer exercised — its breaker never half-opens again, so
+        recovery needs an explicit ``update_tiers`` with the restored
+        specs (or ``fault_resolve=False`` with manual control)."""
+        self.fault_resolves += 1
+        if isinstance(self.server, MultiTierServer):
+            specs = [
+                dataclasses.replace(
+                    t,
+                    availability=(
+                        0.0 if j in self._hop_open
+                        else self._hop_avail.get(j, t.availability)
+                    ),
+                )
+                if j < len(self.tiers) - 1 else t
+                for j, t in enumerate(self.tiers)
+            ]
+            return self.update_tiers(specs)
+        # 2-tier: availability reaches the solve through the lattice route
+        # (see solve()); segments are unchanged, so no executor refresh.
+        return self._install(self._best_p())
 
     def measured_probs(self) -> np.ndarray:
         """Conditional p_k per branch from the observed window.  Branches

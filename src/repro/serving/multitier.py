@@ -53,6 +53,13 @@ class MultiTierStepReport:
     live: int = 0
     #: The executor's raw result — what the request scheduler consumes.
     tier_result: TierStepResult | None = None
+    #: Fault-plane outputs (serving.tiers degraded-step contract): rows
+    #: finalized from the fallback head / rows that could not emit, the
+    #: step's replayable fault trace, and the broken hop (None = healthy).
+    degraded: np.ndarray | None = None
+    failed: np.ndarray | None = None
+    fault_events: tuple = ()
+    degraded_hop: int | None = None
 
 
 @dataclasses.dataclass
@@ -76,6 +83,11 @@ class MultiTierServer(ServesRequests):
     # into the segment specs and the lattice estimator.
     mesh: Any = None
     sharding: Any = None
+    # Fault plane (serving.faults): a seeded LinkFaultModel arms hop
+    # fault injection + breaker-gated retries + exit-head degradation;
+    # hop_policy overrides the retry/timeout/breaker defaults.
+    fault_model: Any = None
+    hop_policy: Any = None
 
     def __post_init__(self):
         self.tiers = tuple(self.tiers)
@@ -95,6 +107,8 @@ class MultiTierServer(ServesRequests):
             bucket_headroom=self.bucket_headroom,
             mesh=self.mesh,
             sharding=self.sharding,
+            fault_model=self.fault_model,
+            hop_policy=self.hop_policy,
         )
         self.params = self.executor.params
 
@@ -158,6 +172,10 @@ class MultiTierServer(ServesRequests):
             pipeline_fallbacks=self.executor.pipeline_fallbacks,
             live=res.live,
             tier_result=res,
+            degraded=res.degraded,
+            failed=res.failed,
+            fault_events=res.fault_events,
+            degraded_hop=res.degraded_hop,
         )
         return rep, caches
 

@@ -66,6 +66,14 @@ class StepReport:
     #: The executor's raw result (per-slot tokens_dev / exit_tier / probe
     #: coverage) — what the request scheduler and controller consume.
     tier_result: TierStepResult | None = None
+    #: Fault-plane outputs (serving.tiers degraded-step contract): rows
+    #: finalized from the edge fallback head / rows that could not emit,
+    #: the step's replayable fault trace, and the broken hop (None =
+    #: healthy step).
+    degraded: np.ndarray | None = None
+    failed: np.ndarray | None = None
+    fault_events: tuple = ()
+    degraded_hop: int | None = None
 
 
 @dataclasses.dataclass
@@ -93,6 +101,11 @@ class PartitionedServer(ServesRequests):
     sharding: Any = None
     tier_devices: tuple[int, int] | None = None
     ici_bps: float = 0.0
+    # Fault plane (serving.faults): a seeded LinkFaultModel arms uplink
+    # fault injection + breaker-gated retries + edge-head degradation;
+    # hop_policy overrides the retry/timeout/breaker defaults.
+    fault_model: Any = None
+    hop_policy: Any = None
 
     def __post_init__(self):
         if self.tier_devices is None:
@@ -110,6 +123,8 @@ class PartitionedServer(ServesRequests):
             bucket_headroom=self.bucket_headroom,
             mesh=self.mesh,
             sharding=self.sharding,
+            fault_model=self.fault_model,
+            hop_policy=self.hop_policy,
         )
         self.params = self.executor.params
 
@@ -147,6 +162,10 @@ class PartitionedServer(ServesRequests):
             pipeline_fallbacks=self.executor.pipeline_fallbacks,
             live=res.live,
             tier_result=res,
+            degraded=res.degraded,
+            failed=res.failed,
+            fault_events=res.fault_events,
+            degraded_hop=res.degraded_hop,
         )
         return rep, caches
 

@@ -91,6 +91,9 @@ class Request:
     #: pre-arrival simulation time).
     arrival_s: float = 0.0
     _arrived: bool = True  # arrival_s already stamped
+    #: Times this request was re-queued after a slot fault (capped by the
+    #: scheduler's ``max_requeues``; exceeded -> terminal ``failed``).
+    _requeues: int = 0
 
 
 @dataclasses.dataclass
@@ -108,6 +111,17 @@ class RequestResult:
     ttft_s: float | None = None  # arrival -> first decoded token on host
     latency_s: float | None = None  # arrival -> retirement
     done: bool = False
+    #: Terminal status: "ok" — every token came from the planned
+    #: trajectory; "degraded" — finished, but >= 1 token was finalized
+    #: from a fallback exit head below a broken hop (see
+    #: ``degraded_tokens``); "failed" — an unrecoverable hop fault ended
+    #: the request with no token that step and requeues were exhausted
+    #: (or disabled); "requeued" — transient marker on a result whose
+    #: request went back in the queue (replaced at re-admission).
+    status: str = "ok"
+    #: Tokens in ``tokens`` that a degraded step force-finalized from a
+    #: fallback head (real tokens, shallower than planned).
+    degraded_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -122,6 +136,11 @@ class SchedulerStepReport:
     emitted: dict[int, int]  # rid -> token decoded this step
     occupancy: float = 0.0  # live / slots
     server_report: Any = None  # the underlying server/tier step report
+    #: rids whose token this step came from a fallback exit head
+    #: (degraded step) and rids whose slot hit an unrecoverable fault
+    #: (retired failed, or re-queued when ``requeue_on_fail``).
+    degraded: tuple[int, ...] = ()
+    failed: tuple[int, ...] = ()
 
 
 class RequestScheduler:
@@ -149,6 +168,8 @@ class RequestScheduler:
         reset_on_retire: bool = False,
         clock: Callable[[], float] = time.perf_counter,
         on_step: Sequence[Callable[[Any], Any]] = (),
+        requeue_on_fail: bool = False,
+        max_requeues: int = 1,
     ):
         if policy not in ("continuous", "gang"):
             raise ValueError(f"unknown admission policy: {policy!r}")
@@ -172,6 +193,13 @@ class RequestScheduler:
         self.reset_on_retire = reset_on_retire
         self.clock = clock
         self.on_step = list(on_step)
+        #: A request whose slot hits an unrecoverable fault (its row is in
+        #: the step result's ``failed`` mask) re-enters the queue head for
+        #: a fresh admission instead of retiring ``failed`` — up to
+        #: ``max_requeues`` times per request.  Its slot is reclaimed
+        #: either way (the allocator invariant the fault tests pin).
+        self.requeue_on_fail = requeue_on_fail
+        self.max_requeues = max_requeues
 
         # Mesh-sharded executors place the slot caches under the policy's
         # cache rules up front (no-op otherwise); admission prefill and
@@ -326,19 +354,48 @@ class RequestScheduler:
         tokens = np.asarray(res.tokens)
         exited = np.asarray(res.exited)
         exit_tier = np.asarray(res.exit_tier)
+        deg_mask = getattr(res, "degraded", None)
+        fail_mask = getattr(res, "failed", None)
         self.tok_dev = res.tokens_dev[:, None]
 
         emitted: dict[int, int] = {}
         retired: list[int] = []
+        degraded: list[int] = []
+        failed: list[int] = []
         live = int(self.active.sum())
         for slot in np.flatnonzero(self.active):
             req = self._slot_req[slot]
             r = self.results[req.rid]
+            if fail_mask is not None and fail_mask[slot]:
+                # Unrecoverable hop fault: no token this step.  Reclaim
+                # the slot either way; the request re-queues (fresh
+                # admission, fresh result) or retires terminally failed.
+                self.active[slot] = False
+                self._slot_req[slot] = None
+                failed.append(req.rid)
+                if (
+                    self.requeue_on_fail
+                    and req._requeues < self.max_requeues
+                ):
+                    req._requeues += 1
+                    r.status = "requeued"
+                    self.queue.appendleft(req)
+                else:
+                    r.done = True
+                    r.status = "failed"
+                    r.retired_step = self.step_count
+                    r.latency_s = now - req.arrival_s
+                    self.finished.append(req.rid)
+                    retired.append(req.rid)
+                continue
             tok = int(tokens[slot])
             emitted[req.rid] = tok
             r.tokens.append(tok)
             r.exited.append(bool(exited[slot]))
             r.exit_tiers.append(int(exit_tier[slot]))
+            if deg_mask is not None and deg_mask[slot]:
+                r.degraded_tokens += 1
+                degraded.append(req.rid)
             if r.ttft_s is None:
                 r.ttft_s = now - req.arrival_s
             self.pos[slot] += 1
@@ -348,6 +405,7 @@ class RequestScheduler:
                 req.stop_on_exit and exited[slot]
             ):
                 r.done = True
+                r.status = "degraded" if r.degraded_tokens else "ok"
                 r.retired_step = self.step_count
                 r.latency_s = now - req.arrival_s
                 self.active[slot] = False
@@ -368,6 +426,8 @@ class RequestScheduler:
             emitted=emitted,
             occupancy=live / self.slots,
             server_report=rep,
+            degraded=tuple(degraded),
+            failed=tuple(failed),
         )
         for cb in self.on_step:
             cb(res)

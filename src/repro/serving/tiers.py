@@ -79,6 +79,63 @@ pipelining resumes on the next step.  ``install`` (a repartition) and
 ``drain()`` also drain the pipeline so no old-plan transfer overlaps the
 new plan.
 
+Fault plane and degraded steps (``fault_model`` / ``hop_policy``)
+-----------------------------------------------------------------
+A hop in a real deployment drops, flaps and slows down; the runtime's
+answer is the BranchyNet one — *answer from the deepest exit head below
+the broken link* — rather than an exception.  Attaching a
+:class:`~repro.serving.faults.LinkFaultModel` (and optionally a
+:class:`~repro.serving.faults.HopPolicy`) arms a two-phase fault plane:
+
+  * **Phase A (pre-dispatch, host-side, sync-free):** before any segment
+    is dispatched, every hop the plan would cross is health-checked in
+    order — circuit-breaker gate, then up to ``1 + max_retries``
+    simulated attempts (each failing on a scripted flap, a sampled drop,
+    or a worst-case-payload transfer-time estimate exceeding
+    ``timeout_s``; retries charge exponential backoff).  All decisions
+    are deterministic functions of ``(seed, fault-step, hop)`` — never
+    of the batch's live trajectory — so fault traces replay bit-exactly
+    and an overflow retry re-uses the same plan.
+  * **Phase B (post-sync):** under ``simulate_network`` the surviving
+    hops charge their (multiplier-scaled, spike-added) transfer time
+    plus any retry overhead to the wall clock; a broken hop charges only
+    the overhead its failed attempts burned.
+
+The degraded-step contract:
+
+  * **Healthy steps are bitwise untouched.**  With no fault model the
+    code path is identical to before; with a benign model attached
+    (no flaps/drops/spikes, multiplier 1) every token, exit mask, cache
+    write and byte count is bitwise identical to a run without it.
+  * On breaker-open or retry exhaustion at hop ``j``, the step runs only
+    the segments up to the one holding the **deepest exit head at or
+    below hop j's cut** (a branch sitting exactly at the cut — normally
+    discarded — is re-enabled as the fallback head) and every still-live
+    row is finalized from that head via the normal per-branch exit
+    masking: rows that exited upstream keep their exact tokens, forced
+    rows emit the fallback head's argmax.  The step still performs
+    exactly ONE device->host sync, still bumps the cache clock once, and
+    reports the forced rows in ``TierStepResult.degraded`` with
+    ``exit_tier`` = the fallback tier.  Forced exits are *not* counted
+    in ``branch_take`` (controller exit-probability estimates only ever
+    see genuine threshold exits).
+  * If no exit head exists at or below the broken hop, nothing useful
+    can be computed: the step dispatches nothing (no sync), emits no
+    tokens, and reports every live row in ``TierStepResult.failed`` —
+    the scheduler retires (or requeues) those requests with a terminal
+    ``failed`` status and reclaims their KV slots.
+  * ``fault_events`` carries the replayable per-step trace (attempts,
+    retries, breaker transitions) and ``degraded_hop`` the broken hop;
+    the :class:`~repro.serving.controller.RepartitionController` ingests
+    both to EWMA per-hop health and re-solve toward a cut that avoids
+    the sick link (``TierSpec.availability`` prices it in the lattice).
+
+Zero-uplink hops under ``simulate_network`` are part of the same
+contract: a hop that must ship bytes but has no usable ``uplink_bps``
+raises :class:`~repro.serving.faults.LinkDownError` when no fault model
+is attached (previously it silently slept 0 s — a dead link looked
+free), and degrades through the fault plane when one is.
+
 Bucket ladder and the one-sync invariant.  jit needs static shapes, so
 sub-batches are padded to :func:`repro.core.multitier.bucket_ladder`
 (powers of two, plus the full batch).  The bucket for step ``t`` is chosen
@@ -228,6 +285,16 @@ from repro.configs.base import ModelConfig
 from repro.core.calibration import normalized_entropy
 from repro.core.multitier import bucket_for, bucket_ladder
 from repro.kernels import ops as kernel_ops
+from repro.serving.faults import (
+    CircuitBreaker,
+    FaultEvent,
+    HEALTHY,
+    HopOutcome,
+    HopPolicy,
+    LinkDownError,
+    LinkFaultModel,
+    attempt_hop,
+)
 from repro.launch.mesh import mesh_devices
 from repro.models.layers import norm_apply
 from repro.sharding.ctx import activation_sharding
@@ -250,6 +317,7 @@ __all__ = [
     "bytes_per_sequence",
     "transfer_seconds",
     "TOKEN_ID_BYTES",
+    "LinkDownError",
 ]
 
 #: Per-sequence payload of a hop taken before any trunk layer ran: the raw
@@ -298,9 +366,15 @@ class HopCompaction:
 
 def transfer_seconds(nbytes: float, uplink_bps: float | None) -> float:
     """Wall seconds to ship ``nbytes`` over a hop, with the runtime's
-    zero-uplink policy: an unset/zero bandwidth reports 0.0 (the hop is
-    unaccounted, not priced infinite — the *cost model* prices unusable
-    hops at inf via :func:`repro.core.multitier._hop_seconds`)."""
+    zero-uplink policy: an unset/zero bandwidth reports 0.0 for *byte
+    accounting* (the hop is unaccounted, not priced infinite — the cost
+    model prices unusable hops at inf via
+    :func:`repro.core.multitier._hop_seconds`).  The wall-clock
+    ``simulate_network`` path never reaches here with a dead uplink and
+    a nonzero payload: :meth:`TierExecutor.step` raises
+    :class:`~repro.serving.faults.LinkDownError` (no fault model) or
+    degrades through the fault plane (model attached) instead of
+    pricing the dead hop free."""
     if not uplink_bps or uplink_bps <= 0.0:
         return 0.0
     return nbytes * 8.0 / uplink_bps
@@ -390,6 +464,18 @@ class TierStepResult:
     branch_probe_mask: dict[int, np.ndarray] = dataclasses.field(
         default_factory=dict
     )
+    #: Fault-plane outputs (see the module docstring's degraded-step
+    #: contract).  ``degraded`` marks rows finalized from the fallback
+    #: exit head below a broken hop (their token is real, just shallower
+    #: than planned); ``failed`` marks rows that could not emit at all
+    #: (no exit head at or below the broken hop).  Both None on healthy
+    #: steps with no fault plane armed.  ``fault_events`` is the step's
+    #: replayable trace; ``degraded_hop`` the hop that broke (None =
+    #: healthy step).
+    degraded: np.ndarray | None = None
+    failed: np.ndarray | None = None
+    fault_events: tuple[FaultEvent, ...] = ()
+    degraded_hop: int | None = None
 
 
 class TierExecutor:
@@ -446,6 +532,8 @@ class TierExecutor:
         bucket_headroom: float = 0.0,
         mesh: Any = None,
         sharding: Any = None,
+        fault_model: LinkFaultModel | None = None,
+        hop_policy: HopPolicy | None = None,
     ):
         if compaction not in ("bucketed", "off"):
             raise ValueError(f"unknown compaction mode: {compaction!r}")
@@ -502,6 +590,27 @@ class TierExecutor:
         #: clocks, and when the previous step's last transfer completes.
         self._link_free: list[float] = []
         self._inflight_done = 0.0
+        # Fault plane (armed iff a fault model is attached; a policy alone
+        # arms it with an all-healthy model so timeouts/breakers still
+        # apply to the real uplinks).
+        if fault_model is None and hop_policy is not None:
+            fault_model = LinkFaultModel()
+        self.fault_model = fault_model
+        self.hop_policy = (
+            hop_policy if hop_policy is not None
+            else (HopPolicy() if fault_model is not None else None)
+        )
+        #: Per-hop circuit breakers, keyed by hop index.  Hop identity is
+        #: the tier-boundary position, which survives repartitions —
+        #: breaker state deliberately persists across ``install`` so a
+        #: re-solve cannot reset an open breaker.
+        self._breakers: dict[int, CircuitBreaker] = {}
+        #: The fault plane's step clock (drives seeded draws and flap
+        #: windows); advances once per ``step()`` when the plane is armed.
+        self.fault_step = 0
+        self.degraded_steps = 0
+        self.failed_steps = 0
+        self.fault_retries = 0
         self.install(segments)
 
     # -------------------------------------------------------------- plan
@@ -574,6 +683,7 @@ class TierExecutor:
         bucket: int | None = None,
         probe: tuple[int, ...] = (),
         probe_m: int | None = None,
+        degrade: int | None = None,
     ):
         """Build (or fetch) the jitted callable for one tier segment.
 
@@ -584,18 +694,25 @@ class TierExecutor:
         (would-exit masks + entropies; exits/tokens untouched);
         ``probe_m`` samples those heads on ``probe_m`` rows instead of the
         whole sub-batch (the evaluated rows come back as a coverage mask).
-        All variants share the signature
+        ``degrade``: a degraded step's terminal segment — after the plan
+        branches run their normal exit masking, every still-unexited row
+        is force-finalized from the exit head at 1-based layer ``degrade``
+        (the deepest head at or below the broken hop; re-enables a head
+        sitting exactly at the cut), and the cache step clock is bumped
+        here since no head tier runs.  All variants share the signature
         ``fn(params, x, pos, exited, chosen, caches[, probe_rows])`` with
         full-batch x; ``pos`` is the shared () step position or the
         continuous-batching per-sequence (B,) positions.
         """
-        key = ((*seg.spec(head), probe, probe_m), bucket)
+        key = ((*seg.spec(head), probe, probe_m, degrade), bucket)
         if key in self._fn_cache:
             return self._fn_cache[key]
         cfg = self.cfg
         lo, hi, branches = seg.layer_lo, seg.layer_hi, seg.branches
         plan_set = frozenset(branches)
-        eval_layers = tuple(sorted({*branches, *probe}))
+        probe_set = frozenset(probe)
+        extra = () if degrade is None else (degrade,)
+        eval_layers = tuple(sorted({*branches, *probe, *extra}))
         use_kernels = self.use_kernels
         trace_counts = self.trace_counts
 
@@ -654,7 +771,9 @@ class TierExecutor:
                 # permutation of it) and remember which batch rows that
                 # covers for the report.
                 pr_idx = probe_rows.astype(jnp.int32) % sub
-                plan_hidden = {l: collected[l] for l in branches}
+                plan_hidden = {
+                    l: collected[l] for l in {*branches, *extra}
+                }
                 probe_hidden = {l: collected[l][pr_idx] for l in probe}
                 bl = _branch_logits(params, plan_hidden, cfg)
                 blp = _branch_logits(params, probe_hidden, cfg)
@@ -670,11 +789,24 @@ class TierExecutor:
                     ex = ex | take
                     takes.append(take)
                     ents.append(e)
-                else:  # probe: report-only, never alters the trajectory
+                elif layer in probe_set:
+                    # probe: report-only, never alters the trajectory
                     exp = ex if pr_idx is None else ex[pr_idx]
                     take, e, _ = exit_decision(blp[layer][:, 0], exp)
                     ptakes.append(take)
                     pents.append(e)
+                # else: the degrade fallback head, consumed below.
+            if degrade is not None:
+                # Degraded terminal segment: force-finalize every
+                # still-unexited row from the fallback head (threshold
+                # ignored — the link below is dead, this IS the answer)
+                # and advance the cache step clock, which normally
+                # happens on the head tier.
+                dtok = jnp.argmax(bl[degrade][:, 0], -1).astype(jnp.int32)
+                ch = jnp.where(ex, ch, dtok)
+                ex = jnp.ones_like(ex)
+                new_caches = dict(new_caches)
+                new_caches["length"] = caches["length"] + 1
             psub = sub if probe_m is None else probe_m
             take_s = jnp.stack(takes) if takes else jnp.zeros((0, sub), bool)
             ents_s = (
@@ -715,7 +847,7 @@ class TierExecutor:
                     )
                 if head:
                     out["logits"] = logits
-                else:
+                elif degrade is None:
                     out["hidden"] = h
             else:
                 # ---- scatter back to original batch order (device-side).
@@ -746,7 +878,7 @@ class TierExecutor:
                         jnp.zeros((batch, logits.shape[-1]), logits.dtype)
                         .at[rows].set(logits)
                     )
-                else:
+                elif degrade is None:
                     out["hidden"] = (
                         jnp.zeros((batch, 1, h.shape[-1]), h.dtype)
                         .at[rows].set(h)
@@ -908,6 +1040,64 @@ class TierExecutor:
                 out[i] = extra
         return out
 
+    def _plan_hops(
+        self, batch: int
+    ) -> tuple[int | None, dict[int, HopOutcome], tuple[FaultEvent, ...]]:
+        """Phase A of the fault plane: health-check every hop the plan
+        would cross, in order, *before* any segment dispatches.
+
+        Per hop: circuit-breaker gate (open + cooling -> skip the hop
+        entirely, a fast degrade that is NOT a link observation; open +
+        cooled -> one half-open probe attempt), then the policy's attempt
+        loop against this step's drawn hop condition, with the transfer
+        deadline evaluated on the worst-case full-batch payload so the
+        decision never depends on the live trajectory.  The first hop
+        that fails breaks the chain (later hops are not attempted).
+
+        Returns (broken hop index or None, per-hop outcomes for attempted
+        hops, the step's event trace)."""
+        pol = self.hop_policy
+        model = self.fault_model
+        step = self.fault_step
+        events: list[FaultEvent] = []
+        outcomes: dict[int, HopOutcome] = {}
+        broken: int | None = None
+        for j in range(self._head_idx):
+            br = self._breakers.get(j)
+            if br is None:
+                br = self._breakers[j] = CircuitBreaker(pol)
+            gate = br.gate(step)
+            if gate == "skip":
+                events.append(FaultEvent(step, j, "breaker_skip"))
+                broken = j
+                break
+            if gate == "probe":
+                events.append(FaultEvent(step, j, "breaker_half_open"))
+            attempts = 1 if gate == "probe" else 1 + pol.max_retries
+            cond, jitter_u, drops = model.draw(step, j, attempts)
+            est_bytes = batch * bytes_per_sequence(
+                self.cfg, self.segments[j].layer_hi
+            )
+            out = attempt_hop(
+                pol, cond, drops, jitter_u, step=step, hop=j,
+                est_bytes=est_bytes,
+                uplink_bps=self.segments[j].uplink_bps or 0.0,
+                attempts=attempts,
+            )
+            events.extend(out.events)
+            outcomes[j] = out
+            self.fault_retries += sum(
+                1 for e in out.events if e.kind == "retry"
+            )
+            was = br.state
+            br.record(step, out.ok)
+            if br.state != was:
+                events.append(FaultEvent(step, j, f"breaker_{br.state}"))
+            if not out.ok:
+                broken = j
+                break
+        return broken, outcomes, tuple(events)
+
     def _run_once(
         self, tok: jax.Array, pos, caches: Any, buckets: dict[int, int],
         probe_map: dict[int, tuple[int, ...]] | None = None,
@@ -915,12 +1105,16 @@ class TierExecutor:
         probe_rows: jax.Array | None = None,
         probe_m: int | None = None,
         active_np: np.ndarray | None = None,
+        degrade: tuple[int, int] | None = None,
     ) -> tuple:
         """Dispatch all tier segments and perform the single host sync.
         Returns (host dict, caches, entering-survivor counts per segment,
-        chosen, logits, alive-after-segment counts).  ``exited0`` seeds the
-        exit mask with the dead slots of a continuous-batching step (they
-        compact away downstream exactly like early exits)."""
+        chosen, logits, alive-after-segment counts, plan-exit mask).
+        ``exited0`` seeds the exit mask with the dead slots of a
+        continuous-batching step (they compact away downstream exactly
+        like early exits).  ``degrade=(seg_idx, layer)`` truncates the
+        step at ``seg_idx``, whose fn force-finalizes survivors from the
+        exit head at ``layer`` (broken-hop fallback; no head tier runs)."""
         probe_map = probe_map or {}
         cfg = self.cfg
         batch = tok.shape[0]
@@ -932,14 +1126,21 @@ class TierExecutor:
         x: jax.Array = tok
         fetch: dict[str, Any] = {}
         logits = None
+        last_idx = len(self.segments) if degrade is None else degrade[0] + 1
 
         for i, seg in enumerate(self.segments):
+            if i >= last_idx:
+                break
             if seg.is_empty:
                 continue
             head = i == self._head_idx
             b = buckets.get(i)
             pr = probe_map.get(i, ())
-            if b is None and not pr:
+            deg = (
+                degrade[1] if degrade is not None and i == degrade[0]
+                else None
+            )
+            if b is None and not pr and deg is None:
                 fn = self._fns[i]
             else:
                 # Downstream tiers always run the compact->run->scatter fn
@@ -949,7 +1150,7 @@ class TierExecutor:
                 # fn variant a hint happened to select.
                 fn = self._segment_fn(
                     seg, head, None if b is None else min(b, batch), probe=pr,
-                    probe_m=probe_m if pr else None,
+                    probe_m=probe_m if pr else None, degrade=deg,
                 )
             if pr and probe_m is not None:
                 out = fn(
@@ -969,7 +1170,10 @@ class TierExecutor:
                     fetch[f"pcover{i}"] = out["pcover"]
             if head:
                 logits = out["logits"]
-            else:
+            elif deg is None:
+                # A degrade-terminal segment force-finalized every row and
+                # emits no handoff hidden state (and the loop breaks next
+                # iteration anyway).
                 x = out["hidden"]
 
         fetch["tokens"] = chosen
@@ -979,7 +1183,10 @@ class TierExecutor:
 
         # Host-side bookkeeping on the fetched masks (no further syncs):
         # cumulative exits -> survivors entering each segment.  Dead slots
-        # are never alive, so they neither ship nor widen buckets.
+        # are never alive, so they neither ship nor widen buckets.  On a
+        # degraded step segments past the truncation have no masks; their
+        # counts carry the last executed segment's survivors (the rows the
+        # fallback head force-finalized).
         exited_run = (
             np.zeros((batch,), bool) if active_np is None
             else ~np.asarray(active_np, bool)
@@ -987,14 +1194,16 @@ class TierExecutor:
         alive_after_seg = {}
         for i, seg in enumerate(self.segments):
             for row, _layer in enumerate(seg.branches):
-                exited_run |= host[f"take{i}"][row]
+                if f"take{i}" in host:
+                    exited_run |= host[f"take{i}"][row]
             alive_after_seg[i] = int(batch - exited_run.sum())
         entering = {
             i: alive_after_seg[i - 1]
-            for i in range(1, len(self.segments))
+            for i in range(1, last_idx)
             if not self.segments[i].is_empty
         }
-        return host, caches, entering, chosen, logits, alive_after_seg
+        return host, caches, entering, chosen, logits, alive_after_seg, \
+            exited_run
 
     def step(
         self, tok: jax.Array, pos, caches: Any, *, active=None
@@ -1016,6 +1225,80 @@ class TierExecutor:
         active_np = None if active is None else np.array(active, dtype=bool)
         exited0 = None if active_np is None else jnp.asarray(~active_np)
         live = batch if active_np is None else int(active_np.sum())
+        # ---- fault plane, phase A: decide hop health before dispatch.
+        broken: int | None = None
+        outcomes: dict[int, HopOutcome] = {}
+        fault_events: tuple[FaultEvent, ...] = ()
+        degrade: tuple[int, int] | None = None
+        if self.fault_model is not None:
+            broken, outcomes, fault_events = self._plan_hops(batch)
+            self.fault_step += 1
+            if broken is not None:
+                self.degraded_steps += 1
+                cut = self.segments[broken].layer_hi
+                # Deepest exit head at or below the broken hop's cut —
+                # including a head sitting exactly at the cut, which the
+                # healthy plan discards (Sec. IV-B) but degradation
+                # re-enables as the fallback.
+                deg_layer = max(
+                    (b for b in cfg.branch_layers if b <= cut), default=-1
+                )
+                if deg_layer >= 1:
+                    deg_idx = next(
+                        i for i, s in enumerate(self.segments)
+                        if not s.is_empty
+                        and s.layer_lo < deg_layer <= s.layer_hi
+                    )
+                    degrade = (deg_idx, deg_layer)
+        if broken is not None and degrade is None:
+            # No exit head at or below the broken hop: nothing upstream
+            # can emit, so dispatch nothing (no sync, no cache-clock
+            # advance) — every live row fails this step and the caches
+            # are returned untouched.
+            self.failed_steps += 1
+            failed_mask = (
+                np.ones((batch,), bool) if active_np is None
+                else active_np.copy()
+            )
+            sim = ()
+            if self.simulate_network:
+                # Charge only the pre-flight overhead the attempts burned
+                # (no payload ever left the entry tier).
+                sim = tuple(
+                    outcomes[j].overhead_s if j in outcomes else 0.0
+                    for j in range(self._head_idx)
+                )
+                if self.overlap == "pipelined":
+                    self.pipeline_fallbacks += 1
+                    self.drain()
+                total = sum(sim)
+                if total > 0:
+                    time.sleep(total)
+            result = TierStepResult(
+                tokens=np.zeros((batch,), np.int32),
+                exited=(
+                    np.zeros((batch,), bool) if active_np is None
+                    else ~active_np
+                ),
+                exit_tier=np.full((batch,), -1, np.int32),
+                branch_take={},
+                branch_entropy={},
+                shipped_per_hop=(0,) * self._head_idx,
+                bytes_per_hop=(0.0,) * self._head_idx,
+                tokens_dev=jnp.zeros((batch,), jnp.int32),
+                last_logits=None,
+                compaction=tuple(
+                    HopCompaction(0, 0) for _ in range(self._head_idx)
+                ),
+                sim_transfer_s=sim,
+                live=live,
+                active=active_np,
+                degraded=np.zeros((batch,), bool),
+                failed=failed_mask,
+                fault_events=fault_events,
+                degraded_hop=broken,
+            )
+            return result, caches
         probe_map = self._probe_layers() if self.probe_next else {}
         self.probe_next = False
         probe_rows = None
@@ -1045,10 +1328,11 @@ class TierExecutor:
                 probe_rows = jnp.asarray(sel, jnp.int32)
                 probe_m = m
         buckets = self._plan_buckets(batch)
-        host, new_caches, entering, chosen, logits, alive = self._run_once(
-            tok, pos, caches, buckets, probe_map,
-            exited0, probe_rows, probe_m, active_np,
-        )
+        host, new_caches, entering, chosen, logits, alive, exited_plan = \
+            self._run_once(
+                tok, pos, caches, buckets, probe_map,
+                exited0, probe_rows, probe_m, active_np, degrade,
+            )
         used = {
             i: min(buckets.get(i, batch), batch) for i in entering
         }
@@ -1077,10 +1361,11 @@ class TierExecutor:
                     )
                     for i in entering
                 }
-            host, new_caches, entering, chosen, logits, alive = self._run_once(
-                tok, pos, caches, buckets, probe_map,
-                exited0, probe_rows, probe_m, active_np,
-            )
+            host, new_caches, entering, chosen, logits, alive, exited_plan = \
+                self._run_once(
+                    tok, pos, caches, buckets, probe_map,
+                    exited0, probe_rows, probe_m, active_np, degrade,
+                )
             used = {i: min(buckets.get(i, batch), batch) for i in entering}
         self._observe_hints(entering)
 
@@ -1093,19 +1378,45 @@ class TierExecutor:
         branch_probe_mask: dict[int, np.ndarray] = {}
         for i, seg in enumerate(self.segments):
             for row, layer in enumerate(seg.branches):
+                if f"take{i}" not in host:  # truncated degraded step
+                    continue
                 mask = host[f"take{i}"][row]
                 branch_take[layer] = mask
                 branch_entropy[layer] = host[f"ents{i}"][row]
                 exit_tier[mask] = i
             for row, layer in enumerate(probe_map.get(i, ())):
+                if f"ptake{i}" not in host:
+                    continue
                 branch_take[layer] = host[f"ptake{i}"][row]
                 branch_entropy[layer] = host[f"pents{i}"][row]
                 if probe_m is not None:
                     branch_probe_mask[layer] = host[f"pcover{i}"]
 
+        # Degraded rows: exited in the fetch but not through any plan
+        # branch — the fallback head force-finalized them.  Their tokens
+        # are real (the fallback head's argmax); ``exit_tier`` points at
+        # the fallback tier; they are deliberately NOT added to
+        # ``branch_take`` so exit-probability estimates see only genuine
+        # threshold exits.
+        degraded_mask = None
+        failed_mask = None
+        if broken is not None:
+            degraded_mask = np.asarray(host["exited"], bool) & ~exited_plan
+            exit_tier[degraded_mask] = degrade[0]
+            failed_mask = np.zeros((batch,), bool)
+
         # Hops: one per cut that still has layers (or the head) downstream.
+        # A degraded step truncates at the fallback tier, so hops from it
+        # onward carried nothing (phase A burned their retry overhead
+        # pre-flight; no payload ever reached the broken link).
+        stop_hop = self._head_idx if degrade is None else degrade[0]
         shipped, nbytes, compaction = [], [], []
         for j in range(self._head_idx):
+            if j >= stop_hop:
+                shipped.append(0)
+                nbytes.append(0.0)
+                compaction.append(HopCompaction(0, 0))
+                continue
             cut = self.segments[j].layer_hi
             alive_j = alive[j]
             shipped.append(alive_j)
@@ -1118,17 +1429,39 @@ class TierExecutor:
 
         sim = ()
         if self.simulate_network:
-            sim = tuple(
-                transfer_seconds(nb, self.segments[j].uplink_bps)
-                for j, nb in enumerate(nbytes)
-            )
-            if self.overlap == "pipelined" and attempts == 0:
+            sim_list = []
+            for j, nb in enumerate(nbytes):
+                o = outcomes.get(j)
+                if o is None:
+                    up = self.segments[j].uplink_bps
+                    if nb > 0 and (not up or up <= 0.0):
+                        # Satellite fix: a dead uplink with bytes queued
+                        # used to price the hop at 0 s (a dead link looked
+                        # free).  With no fault model to degrade through,
+                        # fail loudly instead.
+                        raise LinkDownError(
+                            f"hop {j} ({self.segments[j].name}) must ship "
+                            f"{nb:.0f} bytes but uplink_bps is unset/zero; "
+                            "attach a LinkFaultModel to degrade instead"
+                        )
+                    sim_list.append(transfer_seconds(nb, up))
+                else:
+                    t = 0.0
+                    if o.ok and nb > 0:
+                        eff = (
+                            (self.segments[j].uplink_bps or 0.0)
+                            * o.bandwidth_mult
+                        )
+                        t = o.latency_s + nb * 8.0 / eff
+                    sim_list.append(o.overhead_s + t)
+            sim = tuple(sim_list)
+            if self.overlap == "pipelined" and attempts == 0 and broken is None:
                 self._pipeline_transfers(sim)
             else:
                 if self.overlap == "pipelined":
-                    # Overflow retry: this step already re-ran from the
-                    # entry caches, so fall back to serial for it — drain
-                    # the pipeline, then pay the transfers inline.
+                    # Overflow retry or degraded step: fall back to serial
+                    # for this step — drain the pipeline, then pay the
+                    # transfers inline.
                     self.pipeline_fallbacks += 1
                     self.drain()
                 total = sum(sim)
@@ -1150,5 +1483,9 @@ class TierExecutor:
             live=live,
             active=active_np,
             branch_probe_mask=branch_probe_mask,
+            degraded=degraded_mask,
+            failed=failed_mask,
+            fault_events=fault_events,
+            degraded_hop=broken,
         )
         return result, new_caches
