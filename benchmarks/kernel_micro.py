@@ -183,6 +183,102 @@ def sweep_ssd_update() -> list[str]:
     return rows
 
 
+def sweep_entropy_heads() -> list[str]:
+    """Multi-head fused exit decision: ONE (K, B, V) kernel launch vs K
+    single-head launches over the same stacked logits (per-head outputs
+    are bitwise identical by construction — asserted here)."""
+    rows = []
+    vocab = 2048 if FAST else 32_064
+    ks = (3,) if FAST else (2, 3, 5)
+    for k in ks:
+        for batch, bucket, _ in DECODE_CELLS[:1]:
+            logits = jax.random.normal(
+                jax.random.PRNGKey(k * 7 + bucket), (k, bucket, vocab),
+                jnp.float32
+            ) * 4
+            th = jnp.linspace(0.3, 0.7, k)
+            multi = jax.jit(lambda l: ops.entropy_exit_argmax_heads(l, th))
+            single = jax.jit(lambda l: [
+                ops.entropy_exit_argmax(l[j], th[j]) for j in range(k)
+            ])
+            e, f, t = multi(logits)
+            for j, (ej, fj, tj) in enumerate(single(logits)):
+                np.testing.assert_array_equal(np.asarray(e[j]), np.asarray(ej))
+                np.testing.assert_array_equal(np.asarray(f[j]), np.asarray(fj))
+                np.testing.assert_array_equal(np.asarray(t[j]), np.asarray(tj))
+            t_multi = _time(lambda: multi(logits), iters=ITERS, warmup=WARMUP)
+            t_single = _time(lambda: single(logits), iters=ITERS, warmup=WARMUP)
+            rows.append(_pair(
+                "heads/entropy_exit_argmax_heads",
+                f"k{k}_rows{bucket}_v{vocab}", t_multi, t_single,
+            ))
+    return rows
+
+
+def sweep_heads_batched() -> list[str]:
+    """End-to-end probe-step (all-heads) TierExecutor decode: batched exit
+    heads (one stacked projection + one multi-head exit decision) vs the
+    sequential per-head path.  Shapes are chosen so the K=5 exit heads
+    carry the head-bandwidth term the batching amortizes (d_model 1024,
+    16k vocab: each sequential head re-streams the unembedding).  The
+    trajectories and exit masks must be bitwise identical; the full run
+    asserts the >=1.2x probe-step speedup the batching is for (FAST keeps
+    a loose >=1.0 sanity floor — 2 timed steps are too noisy to gate on).
+    """
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving import TierExecutor, segments_for_cuts
+
+    cfg = dataclasses.replace(
+        get_smoke_config("phi3_mini_3_8b"), num_layers=6,
+        branch_layers=(1, 2, 3, 4, 5), d_model=1024, vocab_size=16_384,
+    )
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = 8
+    steps = 2 if FAST else 8
+    times = {}
+    trajs = {}
+    masks = {}
+    for batched in (True, False):
+        ex = TierExecutor(
+            cfg, params, segments_for_cuts(cfg, (5,)),
+            batched_heads=batched,
+        )
+        caches = M.init_caches(cfg, batch, 64)
+        tok = jax.random.randint(
+            jax.random.PRNGKey(2), (batch, 1), 0, cfg.vocab_size
+        )
+        ex.probe_next = True
+        res, caches = ex.step(tok, 0, caches)  # compile + warm hints
+        ex.probe_next = True  # warm the probe-step compile as well
+        res, caches = ex.step(res.tokens_dev[:, None], 1, caches)
+        t0 = time.perf_counter()
+        traj, msk = [], []
+        for i in range(steps):
+            ex.probe_next = True  # every timed step evaluates all K heads
+            res, caches = ex.step(res.tokens_dev[:, None], i + 2, caches)
+            traj.append(res.tokens)
+            msk.append(res.exited)
+        times[batched] = (time.perf_counter() - t0) / steps * 1e6
+        trajs[batched], masks[batched] = traj, msk
+        assert ex.host_syncs == steps + 2 + ex.overflow_retries
+    for a, b in zip(trajs[True], trajs[False]):
+        np.testing.assert_array_equal(a, b)  # identical trajectory
+    for a, b in zip(masks[True], masks[False]):
+        np.testing.assert_array_equal(a, b)  # identical exit masks
+    speedup = times[False] / times[True]
+    floor = 1.0 if FAST else 1.2
+    assert speedup >= floor, (
+        f"batched exit heads {speedup:.2f}x vs sequential (floor {floor}x)"
+    )
+    return [_pair(
+        "heads/probe_step_k5", f"b{batch}_steps{steps}",
+        times[True], times[False],
+    )]
+
+
 def sweep_tier_step() -> list[str]:
     """End-to-end TierExecutor decode step, kernels on vs off (K=2,
     bucketed compaction, mixed exits on the fixed seed)."""
@@ -238,6 +334,10 @@ def run() -> list[str]:
     rows += sweep_flash_decode()
     rows += sweep_entropy_exit()
     rows += sweep_ssd_update()
+    rows.append("# heads/* rows compare batched vs sequential exit heads "
+                "(columns: name,shape,us_batched,us_sequential)")
+    rows += sweep_entropy_heads()
+    rows += sweep_heads_batched()
     rows += sweep_tier_step()
     return rows
 
@@ -256,8 +356,17 @@ def _bundle(rows: list[str]) -> BenchBundle:
         parts = r.split(",")
         if len(parts) == 4:  # name,shape,us_kernel,us_jnp
             name, shape, us_k, us_j = parts
-            b.cell(f"{name}/{shape}", config=config,
-                   timing=dict(us_kernel=float(us_k), us_jnp=float(us_j)))
+            if name.startswith("heads/"):
+                # Batched-vs-sequential exit-head cells: the pair is
+                # (batched, sequential) and the speedup is the metric the
+                # PR gate reads.
+                b.cell(f"{name}/{shape}", config=config,
+                       timing=dict(us_batched=float(us_k),
+                                   us_sequential=float(us_j),
+                                   speedup=float(us_j) / float(us_k)))
+            else:
+                b.cell(f"{name}/{shape}", config=config,
+                       timing=dict(us_kernel=float(us_k), us_jnp=float(us_j)))
         elif len(parts) == 3:  # name,us,impl (part-1 reference rows)
             name, us, impl = parts
             b.cell(name, config=dict(**config, impl=impl),

@@ -48,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -205,8 +206,23 @@ def _infeasible_error(tiers: list[TierSpec]) -> ValueError:
 _BUCKETED_ENUM_CAP = 50_000
 
 
+def _tier_head_layers(
+    branch_layers: Sequence[int], lo: int, hi: int, j: int, k: int, n: int
+) -> list[int]:
+    """Branch heads tier ``j`` (running layers ``(lo, hi]``) evaluates —
+    the runtime's placement (``serving.tiers.segments_for_cuts``): strict
+    at a cut (a branch there is discarded), none on the final tier of a
+    K>=2 stack, and the deepest branch included at the trunk end of a
+    single-tier plan."""
+    if j == k - 1 and k > 1:
+        return []
+    return [b for b in branch_layers
+            if lo < b and (b <= hi if hi == n else b < hi)]
+
+
 def _solve_enumerated(
-    t_c, alpha, p, tiers, batch, overlap, occupancy=None
+    t_c, alpha, p, tiers, batch, overlap, occupancy=None,
+    head_cost=None, branch_layers=None,
 ) -> "MultiTierPlan | None":
     """Exact solve by enumeration: argmin over monotone cut vectors of the
     closed-form fixed-cut cost (entry-frozen bucketed and/or pipelined).
@@ -217,7 +233,8 @@ def _solve_enumerated(
     if k == 1:
         cost = expected_time_multitier(
             t_c, alpha, p, tiers, (), batch=batch, overlap=overlap,
-            occupancy=occupancy,
+            occupancy=occupancy, head_cost=head_cost,
+            branch_layers=branch_layers,
         )
         return MultiTierPlan((), cost, tuple([0] * n))
     if math.comb(n + k - 1, k - 1) > _BUCKETED_ENUM_CAP:
@@ -226,7 +243,8 @@ def _solve_enumerated(
     for cuts in itertools.combinations_with_replacement(range(n + 1), k - 1):
         c = expected_time_multitier(
             t_c, alpha, p, tiers, cuts, batch=batch, overlap=overlap,
-            occupancy=occupancy,
+            occupancy=occupancy, head_cost=head_cost,
+            branch_layers=branch_layers,
         )
         if c < best_cost:
             best_cost, best_cuts = c, cuts
@@ -248,6 +266,8 @@ def solve_multitier(
     *,
     overlap: bool = False,
     occupancy: float | None = None,
+    head_cost: Callable[[int], float] | None = None,
+    branch_layers: Sequence[int] | None = None,
 ) -> MultiTierPlan:
     """``batch=None`` is the paper's ideal per-sample model: every layer's
     cost is weighted by the probability the sample still runs it.
@@ -280,6 +300,18 @@ def solve_multitier(
     nominal batch (dead slots are masked, not skipped — exactly the
     runtime's behavior), which is what moves the optimal cut toward the
     entry tier as occupancy drops.
+
+    ``head_cost`` (with ``branch_layers``) adds the branch-head compute
+    term: a callable ``m -> cloud-reference seconds`` for evaluating ``m``
+    exit heads in one step (:func:`repro.core.profiler.branch_head_cost`
+    builds it, batched or sequential).  The batched price couples a tier's
+    heads into one stacked projection, which is not edge-decomposable over
+    the lattice — so a ``head_cost`` solve always enumerates cut vectors
+    (exact), falling back above ``_BUCKETED_ENUM_CAP`` to the head-less
+    DP's cuts re-scored with the head term.  Without it the solver prices
+    branch-heavy cuts as if heads were free — or, historically, callers
+    padded ``t_c`` with K full per-head passes, over-pricing exactly the
+    cuts the batched runtime makes cheap.
     """
     t_c = np.asarray(t_c, float)
     alpha = np.asarray(alpha, float)
@@ -290,21 +322,27 @@ def solve_multitier(
     if occupancy is not None and batch is None:
         raise ValueError("occupancy models the batched runtime; pass batch=")
 
-    if batch is not None or overlap:
+    if batch is not None or overlap or head_cost is not None:
         plan = _solve_enumerated(
-            t_c, alpha, p, tiers, batch, overlap, occupancy
+            t_c, alpha, p, tiers, batch, overlap, occupancy,
+            head_cost, branch_layers,
         )
         if plan is not None:
             return plan
-    if overlap:
+    if overlap or head_cost is not None:
         # Enumeration overflowed the cap: take the serial DP's plan and
-        # re-score it under the overlap cost.
+        # re-score it under the full cost.  (The batched head price
+        # couples every branch a tier keeps into one stacked projection,
+        # so — like the overlap bottleneck — it is not edge-decomposable
+        # over the lattice; the DP solves without it, a documented
+        # approximation above the cap.)
         plan = solve_multitier(t_c, alpha, p, tiers, batch)
         return dataclasses.replace(
             plan,
             expected_time_s=expected_time_multitier(
                 t_c, alpha, p, tiers, plan.cut_after, batch=batch,
-                overlap=True, occupancy=occupancy,
+                overlap=overlap, occupancy=occupancy,
+                head_cost=head_cost, branch_layers=branch_layers,
             ),
         )
 
@@ -431,6 +469,8 @@ def expected_time_multitier(
     *,
     overlap: bool = False,
     occupancy: float | None = None,
+    head_cost: Callable[[int], float] | None = None,
+    branch_layers: Sequence[int] | None = None,
 ) -> float:
     """Closed-form E[T] of one *fixed* monotone cut vector (the plan the
     runtime executes), same semantics as :func:`solve_multitier`: branches
@@ -460,6 +500,19 @@ def expected_time_multitier(
     *live* width ``occupancy * batch`` before bucket padding.  This is
     the occupancy-weighted expected-batch term ``est_latency_s`` and the
     :class:`~repro.serving.controller.RepartitionController` price.
+
+    ``head_cost`` (``m -> cloud-reference seconds`` for one step's ``m``
+    exit heads; see :func:`repro.core.profiler.branch_head_cost`) adds a
+    branch-head compute term per tier.  ``branch_layers`` names the branch
+    positions (default: layers with nonzero ``branch_probs``); each tier's
+    evaluated heads follow the runtime's placement (strict at a cut, none
+    on the final tier of a K>=2 stack).  The tier's ``m`` heads are priced
+    as ONE joint evaluation — ``head_cost(m)`` scaled by the tier's
+    ``gamma / devices`` — weighted like its layer compute (bucketed
+    sub-batch fraction; under ``batch=None`` each head is charged its
+    reach times the amortized per-head share ``head_cost(m) / m``, which
+    for a sequential-price callable degenerates to exactly the historical
+    per-head charge).
     """
     t_c = np.asarray(t_c, float)
     alpha = np.asarray(alpha, float)
@@ -493,6 +546,27 @@ def expected_time_multitier(
             else:
                 w = 1.0 if j == entry else _padded_frac(reach[lo] * occ, batch)
             compute[j] += w * _tier_layer_seconds(tiers[j], t_c[i], alpha[i])
+    if head_cost is not None:
+        blayers = (
+            tuple(int(b) for b in branch_layers)
+            if branch_layers is not None
+            else tuple(i for i in range(1, n + 1) if p[i] > 0.0)
+        )
+        for j in range(k):
+            lo, hi = bounds[j], bounds[j + 1]
+            heads = _tier_head_layers(blayers, lo, hi, j, k, n)
+            m = len(heads)
+            if not m:
+                continue
+            scale = tiers[j].gamma / max(int(tiers[j].devices), 1)
+            if batch is None:
+                # Reach-weighted expected work: the joint evaluation's
+                # amortized per-head share, charged at each head's reach.
+                unit = head_cost(m) / m
+                compute[j] += scale * sum(reach[i] * unit for i in heads)
+            else:
+                w = 1.0 if j == entry else _padded_frac(reach[lo] * occ, batch)
+                compute[j] += scale * w * head_cost(m)
     for j in range(k - 1):
         c = bounds[j + 1]
         if c < n:  # layers still run downstream -> the hop really happens

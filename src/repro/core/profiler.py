@@ -35,6 +35,7 @@ __all__ = [
     "TPU_V5E",
     "LayerCost",
     "analyze_layer_costs",
+    "branch_head_cost",
     "decode_layer_fns",
     "measure_layer_times",
     "output_bytes",
@@ -167,6 +168,52 @@ def measure_layer_times(
         ob = output_bytes(jax.eval_shape(fn, args))
         out.append(LayerCost(name, 0.0, 0.0, ob, dt))
     return out
+
+
+# ------------------------------------------------- branch-head pricing
+def branch_head_cost(
+    cfg,
+    batch: int,
+    *,
+    heads_batched: bool = True,
+    hardware: HardwareSpec = TPU_V5E,
+):
+    """Roofline seconds to evaluate ``m`` tied exit heads in one decode
+    step at the cloud-reference tier: per-branch norm + the shared
+    (D, V) unembedding applied to a (batch, D) hidden per head.
+
+    Returns a callable ``m -> seconds`` (``m = 0`` is free) — the
+    ``head_cost=`` input of :func:`repro.core.multitier.solve_multitier` /
+    ``expected_time_multitier`` and both servers' ``est_latency_s``.
+
+    ``heads_batched=True`` prices the runtime's stacked evaluation
+    (``TierExecutor(batched_heads=True)``, the default): FLOPs still scale
+    with ``m``, but the dominant HBM term — streaming (and casting) the
+    D x V unembedding weight — is paid ONCE for the whole stack, so ``m``
+    heads cost about one head's bandwidth.  ``heads_batched=False`` prices
+    the sequential per-head lowering: ``m`` independent projections, each
+    re-reading the weight — what probe-step estimates used to charge
+    unconditionally (K full head passes) even when the runtime batches.
+    """
+    d = float(cfg.d_model)
+    v = float(cfg.padded_vocab_size)
+    b = float(batch)
+    itemsize = 2.0 if cfg.dtype == "bfloat16" else 4.0
+    w_bytes = d * v * itemsize  # the shared unembedding read
+    act_bytes = b * (d + v) * itemsize  # per-head hidden read + logits write
+    flops_per_head = 2.0 * b * d * v
+
+    def cost(m: int) -> float:
+        m = int(m)
+        if m <= 0:
+            return 0.0
+        if heads_batched:
+            return hardware.roofline_time(
+                m * flops_per_head, w_bytes + m * act_bytes
+            )
+        return m * hardware.roofline_time(flops_per_head, w_bytes + act_bytes)
+
+    return cost
 
 
 # ------------------------------------------------- serving decode profiles

@@ -39,7 +39,11 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["entropy_exit_pallas", "entropy_exit_argmax_pallas"]
+__all__ = [
+    "entropy_exit_pallas",
+    "entropy_exit_argmax_pallas",
+    "entropy_exit_argmax_heads_pallas",
+]
 
 NEG_INF = -1e30
 
@@ -234,3 +238,122 @@ def entropy_exit_argmax_pallas(
         interpret=interpret,
     )(logits, thresh)
     return h[:b], ex[:b], idx[:b]
+
+
+def _kernel_argmax_heads(
+    logits_ref,  # (1, block_b, block_v) VMEM — one head's (B, V) tile
+    thresh_ref,  # (K, 1) SMEM — per-head exit thresholds
+    h_ref,  # (1, block_b) out
+    exit_ref,  # (1, block_b) out
+    idx_ref,  # (1, block_b) int32 out
+    m_scr,  # (block_b,) VMEM scratch: running max
+    s_scr,  # (block_b,) running sum exp
+    u_scr,  # (block_b,) running sum l * exp
+    bv_scr,  # (block_b,) running best value
+    bi_scr,  # (block_b,) int32 running best index
+    *,
+    num_v_blocks: int,
+    block_v: int,
+    vocab: int,
+):
+    k = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        u_scr[...] = jnp.zeros_like(u_scr)
+        bv_scr[...] = jnp.full_like(bv_scr, NEG_INF)
+        bi_scr[...] = jnp.zeros_like(bi_scr)
+
+    l = logits_ref[0].astype(jnp.float32)  # (bb, bv)
+    m_old = m_scr[...]
+    m_new = jnp.maximum(m_old, l.max(axis=-1))
+    corr = jnp.exp(m_old - m_new)
+    e = jnp.exp(l - m_new[:, None])
+    s_scr[...] = s_scr[...] * corr + e.sum(axis=-1)
+    u_scr[...] = u_scr[...] * corr + (l * e).sum(axis=-1)
+    m_scr[...] = m_new
+
+    loc_v = l.max(axis=-1)
+    loc_i = jnp.argmax(l, axis=-1).astype(jnp.int32) + j * block_v
+    upd = loc_v > bv_scr[...]
+    bv_scr[...] = jnp.where(upd, loc_v, bv_scr[...])
+    bi_scr[...] = jnp.where(upd, loc_i, bi_scr[...])
+
+    @pl.when(j == num_v_blocks - 1)
+    def _finalize():
+        s = s_scr[...]
+        lse = m_scr[...] + jnp.log(s)
+        h = (lse - u_scr[...] / s) / np.log(vocab)
+        h_ref[0] = h
+        exit_ref[0] = h < thresh_ref[k, 0]
+        idx_ref[0] = bi_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
+def entropy_exit_argmax_heads_pallas(
+    logits: jax.Array,  # (K, B, V) stacked branch-head logits
+    thresholds: jax.Array | float,  # scalar or (K,) per-head thresholds
+    *,
+    block_b: int = 8,
+    block_v: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Multi-head fused exit decision: ONE launch over the batched-head
+    (K, B, V) logits returns (normalized entropy (K, B), exit flags (K, B)
+    bool, argmax token (K, B) int32).
+
+    The grid gains a leading K dim over the single-head kernel — heads are
+    independent rows of the same streaming reduction, so each (k, i) row
+    group carries its own accumulator through the sequential V loop and
+    the per-head slice is bitwise identical to ``entropy_exit_argmax_pallas``
+    on ``logits[k]``.  Per-head thresholds sit in SMEM ((K, 1), scalar
+    broadcast to every head), so K heads with K different calibration
+    points still fuse into the single launch.
+    """
+    k, b, v = logits.shape
+    vocab = v
+    pb = (-b) % block_b
+    pv = (-v) % block_v
+    if pb or pv:
+        logits = jnp.pad(
+            logits, ((0, 0), (0, pb), (0, pv)), constant_values=NEG_INF
+        )
+    _, bb, vv = logits.shape
+    grid = (k, bb // block_b, vv // block_v)
+
+    thresh = jnp.broadcast_to(
+        jnp.asarray(thresholds, jnp.float32).reshape(-1, 1), (k, 1)
+    )
+    h, ex, idx = pl.pallas_call(
+        functools.partial(
+            _kernel_argmax_heads,
+            num_v_blocks=grid[2], block_v=block_v, vocab=vocab,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_b, block_v), lambda k, i, j: (k, i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_b), lambda k, i, j: (k, i)),
+            pl.BlockSpec((1, block_b), lambda k, i, j: (k, i)),
+            pl.BlockSpec((1, block_b), lambda k, i, j: (k, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, bb), jnp.float32),
+            jax.ShapeDtypeStruct((k, bb), jnp.bool_),
+            jax.ShapeDtypeStruct((k, bb), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits, thresh)
+    return h[:, :b], ex[:, :b], idx[:, :b]

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.entropy_exit import (
+    entropy_exit_argmax_heads_pallas,
     entropy_exit_argmax_pallas,
     entropy_exit_pallas,
 )
@@ -49,6 +50,7 @@ from repro.kernels.ssd_scan import ssd_scan_pallas, ssd_update_pallas
 __all__ = [
     "entropy_exit",
     "entropy_exit_argmax",
+    "entropy_exit_argmax_heads",
     "flash_decode",
     "ssd_scan",
     "ssd_update",
@@ -90,6 +92,21 @@ def entropy_exit_argmax(logits, threshold, *, interpret: bool | None = None):
     exit flags (B,), argmax token (B,) int32) in one streaming pass."""
     interp = (not on_tpu()) if interpret is None else interpret
     return entropy_exit_argmax_pallas(logits, threshold, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def entropy_exit_argmax_heads(logits, thresholds, *,
+                              interpret: bool | None = None):
+    """Multi-head fused exit decision: (K, B, V) stacked branch-head
+    logits -> (normalized entropy (K, B), exit flags (K, B), argmax token
+    (K, B) int32) in ONE kernel launch — the batched-head counterpart of
+    :func:`entropy_exit_argmax` (per-head slices are bitwise identical).
+    ``thresholds`` is a scalar (every head) or (K,) per-head array.
+    Sharded segments never reach this wrapper: ``resolve_use_kernels``
+    routes them to the jnp fallback (see ``serving.tiers``)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return entropy_exit_argmax_heads_pallas(logits, thresholds,
+                                            interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))

@@ -13,6 +13,7 @@ import numpy as np
 __all__ = [
     "entropy_exit_ref",
     "entropy_exit_argmax_ref",
+    "entropy_exit_argmax_heads_ref",
     "flash_decode_ref",
     "ssd_scan_ref",
     "ssd_update_ref",
@@ -44,6 +45,22 @@ def entropy_exit_argmax_ref(
     """
     h, ex = entropy_exit_ref(logits, threshold)
     return h, ex, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def entropy_exit_argmax_heads_ref(
+    logits: jax.Array,  # (K, B, V) stacked branch-head logits
+    thresholds: jax.Array | float,  # scalar or (K,) per-head thresholds
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Multi-head fused exit decision over batched-head logits: per head
+    exactly :func:`entropy_exit_argmax_ref` on ``logits[k]`` against
+    ``thresholds[k]`` (a scalar threshold broadcasts to every head).
+    Returns (entropy (K, B), exit (K, B) bool, argmax (K, B) int32)."""
+    k = logits.shape[0]
+    th = jnp.broadcast_to(jnp.asarray(thresholds, jnp.float32).reshape(-1), (k,))
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    h = -jnp.sum(jnp.exp(logp) * logp, axis=-1) / np.log(lf.shape[-1])
+    return h, h < th[:, None], jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
 def flash_decode_ref(

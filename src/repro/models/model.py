@@ -25,7 +25,7 @@ masks (see models/attention.py).
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,7 @@ from repro.models.transformer import (
 )
 
 __all__ = [
+    "branch_logits_stacked",
     "init_params",
     "init_caches",
     "run_trunk",
@@ -313,10 +314,64 @@ def _unembed(params: Params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
     return logits
 
 
+def _stacked_branch_norm(
+    params: Params, hs: jax.Array, idx: Sequence[int], cfg: ModelConfig
+) -> jax.Array:
+    """Per-branch norm over stacked hiddens ``hs`` (K, ..., D); ``idx[k]``
+    selects head k's row of the stacked ``params["branches"]`` tree.  Both
+    norms reduce over the last axis only, so the stacked apply is bitwise
+    the per-head apply."""
+    if cfg.norm_type == "rmsnorm":
+        scale = params["branches"]["scale"][np.asarray(idx)]  # (K, D)
+        bcast = scale.reshape(scale.shape[0], *([1] * (hs.ndim - 2)), -1)
+        return norm_apply(cfg.norm_type, {"scale": bcast}, hs)
+    return norm_apply(cfg.norm_type, {}, hs)
+
+
+def branch_logits_stacked(
+    params: Params,
+    collected: dict[int, jax.Array],
+    cfg: ModelConfig,
+    layers: Sequence[int] | None = None,
+) -> tuple[tuple[int, ...], jax.Array | None]:
+    """Batched tied exit heads: ONE stacked norm + ONE shared-unembedding
+    einsum for every requested branch.
+
+    The per-branch params are stored stacked ((K, D) scale tree for
+    rmsnorm; parameter-free otherwise), so K heads price like one: the
+    collected hiddens stack to (K, B, S, D), the norm applies over the
+    stack, and the unembedding weight is read (and cast) once by a single
+    (K*B*S, D) x (D, V) contraction instead of once per head.  Returns
+    ``(layers, logits (K, B, S, V))`` in ``layers`` order — ``((), None)``
+    when no requested layer was collected.  Per-head results are bitwise
+    identical to the sequential per-branch path: the norm reductions and
+    the contraction over D are row-independent."""
+    want = cfg.branch_layers if layers is None else tuple(layers)
+    present = tuple(l for l in want if l in collected)
+    if not present:
+        return (), None
+    idx = [cfg.branch_layers.index(l) for l in present]
+    hs = jnp.stack([collected[l] for l in present])  # (K, B, S, D)
+    hn = _stacked_branch_norm(params, hs, idx, cfg)
+    return present, _unembed(params, hn, cfg)
+
+
 def _branch_logits(
     params: Params, collected: dict[int, jax.Array], cfg: ModelConfig
 ) -> dict[int, jax.Array]:
-    """Tied early-exit heads: per-branch norm + shared unembedding."""
+    """Tied early-exit heads: per-branch norm + shared unembedding,
+    evaluated through the batched (K, B, S, V) path."""
+    layers, stk = branch_logits_stacked(params, collected, cfg)
+    return {layer: stk[k] for k, layer in enumerate(layers)}
+
+
+def branch_logits_per_head(
+    params: Params, collected: dict[int, jax.Array], cfg: ModelConfig
+) -> dict[int, jax.Array]:
+    """Sequential reference heads: one norm + one unembedding einsum PER
+    branch (the pre-batching lowering).  The serving runtime keeps this as
+    the parity baseline behind ``TierExecutor(batched_heads=False)`` —
+    per-head outputs are bitwise identical to the stacked path."""
     out = {}
     for j, layer in enumerate(cfg.branch_layers):
         if layer not in collected:
@@ -430,11 +485,32 @@ def forward_train(
     main_loss = head_loss(params["final_norm"], h2)
 
     branch_losses = {}
-    for j, layer in enumerate(cfg.branch_layers):
-        if layer not in collected:
-            continue
-        bn = jax.tree_util.tree_map(lambda a: a[j], params["branches"])
-        branch_losses[f"branch_{layer}"] = head_loss(bn, collected[layer])
+    present = tuple(l for l in cfg.branch_layers if l in collected)
+    if present:
+        idx = [cfg.branch_layers.index(l) for l in present]
+
+        # All K branch heads in one stacked norm + one unembedding einsum
+        # (the serving runtime prices branches exactly this way, see
+        # branch_logits_stacked).  Checkpointed like head_loss so no
+        # (K, B, S, V) logits are saved for backward; the backward-pass
+        # recompute does materialize all K heads' logits at once (vs one
+        # head at a time sequentially) — the price of reading the
+        # unembedding once instead of K times.
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def branch_losses_fn(hs):
+            hn = _stacked_branch_norm(params, hs, idx, cfg)
+            logits = constrain(_unembed(params, hn, cfg), ".b.v")
+            lt = logits[:, :, n_patch:] if n_patch else logits
+            return jax.vmap(
+                lambda lg: softmax_xent(
+                    lg[:, :-1], labels[:, 1:],
+                    None if mask is None else mask[:, 1:],
+                )
+            )(lt)
+
+        bl = branch_losses_fn(jnp.stack([collected[l] for l in present]))
+        for k, layer in enumerate(present):
+            branch_losses[f"branch_{layer}"] = bl[k]
 
     loss = main_loss + cfg.branch_loss_weight * sum(branch_losses.values())
     loss = loss + cfg.router_aux_weight * aux

@@ -69,6 +69,9 @@ class ServingEngine(ServesRequests):
     # Decode hot path on the Pallas kernels; None = cfg.use_kernels
     # (still None = auto: kernels on TPU, jnp elsewhere).
     use_kernels: bool | None = None
+    # Batched exit heads: one stacked projection + one multi-head fused
+    # entropy-exit launch per step (serving.tiers "Batched exit heads").
+    heads_batched: bool = True
     # Request-scheduler KV slots for the submit()/run()/drain() API.
     slots: int = 8
     # Device mesh (+ optional explicit ShardingPolicy): run the trunk
@@ -85,6 +88,7 @@ class ServingEngine(ServesRequests):
                 cfg, (), devices=(mesh_devices(self.mesh),) if self.mesh else None
             ),
             use_kernels=self.use_kernels,
+            batched_heads=self.heads_batched,
             mesh=self.mesh, sharding=self.sharding,
         )
         # The executor owns the (possibly mesh-placed) param tree; prefill

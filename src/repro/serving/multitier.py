@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.multitier import MultiTierPlan, TierSpec, expected_time_multitier
+from repro.core.profiler import branch_head_cost
 from repro.serving.scheduler import ServesRequests
 from repro.serving.tiers import (
     HopCompaction,
@@ -73,6 +74,13 @@ class MultiTierServer(ServesRequests):
     simulate_network: bool = False  # sleep each hop's transfer time
     overlap: str = "serial"  # "pipelined" = overlap transfers with compute
     use_kernels: bool | None = None  # Pallas decode path; None = cfg/auto
+    # Batched exit heads (serving.tiers "Batched exit heads"): one
+    # (K, B, D) projection + one multi-head fused entropy-exit launch per
+    # tier instead of K head evaluations; bitwise identical either way.
+    # The same knob selects the branch-head pricing mode when
+    # ``price_heads`` adds the head term to est_latency_s.
+    heads_batched: bool = True
+    price_heads: bool = False  # opt-in branch-head term in est_latency_s
     hint_window: int = 8  # windowed-max bucket hints (1 = last step only)
     bucket_headroom: float = 0.0  # fractional bucket padding vs retries
     slots: int = 8  # request-scheduler KV slots (submit/run/drain API)
@@ -103,6 +111,7 @@ class MultiTierServer(ServesRequests):
             simulate_network=self.simulate_network,
             overlap=self.overlap,
             use_kernels=self.use_kernels,
+            batched_heads=self.heads_batched,
             hint_window=self.hint_window,
             bucket_headroom=self.bucket_headroom,
             mesh=self.mesh,
@@ -198,9 +207,15 @@ class MultiTierServer(ServesRequests):
             p[layer] = took / alive if alive > 0 else 0.0
             alive -= took
         bucketed = self.compaction == "bucketed"
+        head_cost = (
+            branch_head_cost(self.cfg, batch, heads_batched=self.heads_batched)
+            if self.price_heads else None
+        )
         return expected_time_multitier(
             t_c, alpha, p, list(self.tiers), self.cuts,
             batch=batch if bucketed else None,
             overlap=self.overlap == "pipelined",
             occupancy=live / batch if bucketed else None,
+            head_cost=head_cost,
+            branch_layers=self.cfg.branch_layers,
         )

@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.latency import expected_time
 from repro.core.multitier import TierSpec, expected_time_multitier
+from repro.core.profiler import branch_head_cost
 from repro.core.types import CostProfile, NetworkProfile
 from repro.launch.mesh import mesh_devices
 from repro.serving.scheduler import ServesRequests
@@ -87,6 +88,17 @@ class PartitionedServer(ServesRequests):
     simulate_network: bool = False  # sleep each hop's transfer time
     overlap: str = "serial"  # "pipelined" = overlap transfers with compute
     use_kernels: bool | None = None  # Pallas decode path; None = cfg/auto
+    # Batched exit heads: one (K, B, D) projection + one multi-head fused
+    # entropy-exit launch per segment instead of K head evaluations
+    # (serving.tiers "Batched exit heads").  Bitwise identical tokens /
+    # masks either way; False keeps the sequential per-head path.  The
+    # same knob selects the branch-head pricing mode
+    # (core.profiler.branch_head_cost) when ``price_heads`` is on.
+    heads_batched: bool = True
+    # Add the branch-head compute term (priced through ``heads_batched``)
+    # to est_latency_s' lattice cost.  Off by default: the historical
+    # estimate prices trunk layers + hops only.
+    price_heads: bool = False
     hint_window: int = 8  # windowed-max bucket hints (1 = last step only)
     bucket_headroom: float = 0.0  # fractional bucket padding vs retries
     slots: int = 8  # request-scheduler KV slots (submit/run/drain API)
@@ -119,6 +131,7 @@ class PartitionedServer(ServesRequests):
             simulate_network=self.simulate_network,
             overlap=self.overlap,
             use_kernels=self.use_kernels,
+            batched_heads=self.heads_batched,
             hint_window=self.hint_window,
             bucket_headroom=self.bucket_headroom,
             mesh=self.mesh,
@@ -217,10 +230,18 @@ class PartitionedServer(ServesRequests):
                 TierSpec("cloud", 1.0,
                          devices=self.tier_devices[1], ici_bps=self.ici_bps),
             ]
+            head_cost = (
+                branch_head_cost(
+                    self.cfg, batch, heads_batched=self.heads_batched
+                )
+                if self.price_heads else None
+            )
             return expected_time_multitier(
                 prof.t_c, prof.alpha, prof.branch_exit_probs(), tiers, (s,),
                 batch=batch if bucketed else None,
                 overlap=pipelined,
                 occupancy=live / batch if bucketed else None,
+                head_cost=head_cost,
+                branch_layers=self.cfg.branch_layers,
             )
         return expected_time(prof, s)

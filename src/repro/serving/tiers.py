@@ -179,6 +179,49 @@ Kernels recompile per *bucket* exactly like the jnp segment functions
 (the (spec, bucket) cache below); a survivor-count change within a bucket
 never re-traces either path.
 
+Batched exit heads (``batched_heads``)
+--------------------------------------
+A tier that keeps K branches historically evaluated them one at a time:
+K branch-norm + unembedding projections (each re-streaming the shared
+(D, V) unembedding) and K entropy/argmax decisions.  With
+``batched_heads=True`` (the default) a segment evaluates ALL of its
+heads jointly:
+
+  * the kept branches' hiddens are stacked to (K, B, D); the per-branch
+    norm params are applied to the stack (rmsnorm scales are gathered to
+    (K, 1, D) and broadcast; nonparametric norms are parameter-free) and
+    ONE einsum against the shared unembedding yields (K, B, V) logits —
+    the unembedding's bandwidth is paid once, amortized over K heads
+    (:func:`repro.models.model.branch_logits_stacked`);
+  * the K confidence tests run as ONE decision — the multi-head fused
+    :func:`repro.kernels.ops.entropy_exit_argmax_heads` kernel under
+    ``use_kernels`` (grid gains a K dimension; per-head thresholds ride
+    in SMEM), or one vectorized jnp pass otherwise.  Mesh-sharded
+    segments always take the jnp lowering (``resolve_use_kernels``'s
+    ``sharded=True`` contract), which partitions cleanly under SPMD.
+
+The layout contract: heads are stacked in ascending branch-layer order;
+each head's (entropy, flag, argmax) row is *independent* of the running
+exit mask, so first-exit precedence is applied after the joint decision
+exactly as the sequential loop applied it (``take = flag & ~exited`` per
+head, in layer order) — tokens, exit masks, ``branch_take`` /
+``branch_probe_mask`` and degraded-mode forced finalization are all
+bitwise identical to ``batched_heads=False`` (asserted in
+``tests/test_batched_heads.py``); the ``branch_entropy`` float
+diagnostic matches to within a few ULP (XLA may tile the stacked
+``(K*B, D) x (D, V)`` projection GEMM differently from the per-head
+one on some device configurations).
+
+Probe-cost semantics are unchanged: an all-heads probe step folds the
+probe heads into the same stacked projection (kept + probe heads = one
+launch), while a *sampled* probe (``probe_sample_frac`` < 1) stacks the
+probe heads over the sampled rows only as a second, smaller joint
+evaluation — probe FLOPs still price at the sampled sub-batch, never the
+full batch.  The cost layer prices all of this through
+:func:`repro.core.profiler.branch_head_cost` (``heads_batched=`` picks
+the joint vs per-head roofline) feeding the ``head_cost`` term of
+:func:`repro.core.multitier.expected_time_multitier`.
+
 Bucket hints.  The bucket planned for a downstream tier comes from a
 *windowed max* of the last ``hint_window`` steps' survivor counts
 (default 8) inflated by ``bucket_headroom`` (a fraction; 0.0 = exact
@@ -300,8 +343,9 @@ from repro.models.layers import norm_apply
 from repro.sharding.ctx import activation_sharding
 from repro.sharding.policy import make_policy
 from repro.models.model import (
-    _branch_logits,
     _unembed,
+    branch_logits_per_head,
+    branch_logits_stacked,
     embed_decode,
     prefill,
     run_trunk,
@@ -528,6 +572,7 @@ class TierExecutor:
         simulate_network: bool = False,
         overlap: str = "serial",
         use_kernels: bool | None = None,
+        batched_heads: bool = True,
         hint_window: int = 8,
         bucket_headroom: float = 0.0,
         mesh: Any = None,
@@ -560,6 +605,13 @@ class TierExecutor:
             cfg.use_kernels if use_kernels is None else use_kernels,
             sharded=self.sharded,
         )
+        #: Batched exit heads (default): a segment's kept branches + probe
+        #: heads evaluate as ONE stacked (K, B, D) projection against the
+        #: shared unembedding and ONE multi-head entropy-exit launch.
+        #: ``False`` keeps the sequential per-head lowering — the parity
+        #: baseline tests and benchmarks compare against; both paths are
+        #: bitwise identical (see the module docstring).
+        self.batched_heads = bool(batched_heads)
         self.hint_window = hint_window
         self.bucket_headroom = bucket_headroom
         #: Set to make the NEXT step a probe: every cfg.branch_layers head
@@ -714,6 +766,7 @@ class TierExecutor:
         extra = () if degrade is None else (degrade,)
         eval_layers = tuple(sorted({*branches, *probe, *extra}))
         use_kernels = self.use_kernels
+        batched_heads = self.batched_heads
         trace_counts = self.trace_counts
 
         def exit_decision(logits_b, ex):
@@ -730,6 +783,27 @@ class TierExecutor:
                 flag = e < cfg.exit_threshold
                 btok = jnp.argmax(logits_b, -1).astype(jnp.int32)
             return flag & ~ex, e, btok
+
+        def head_decisions(layers, logits_k):
+            """Per-head (entropy, raw exit flag, argmax token) for a
+            stacked (K, B, V) head pile in ONE launch (the multi-head
+            kernel; jnp reductions over the trailing axis otherwise —
+            the fallback sharded segments resolve to).  Per-head slices
+            are bitwise the single-head ``exit_decision`` inputs: the
+            flag is mask-independent, so precedence can be applied to
+            the cheap (B,) rows afterwards."""
+            if use_kernels:
+                e, flag, btok = kernel_ops.entropy_exit_argmax_heads(
+                    logits_k, cfg.exit_threshold
+                )
+            else:
+                e = normalized_entropy(logits_k)
+                flag = e < cfg.exit_threshold
+                btok = jnp.argmax(logits_k, -1).astype(jnp.int32)
+            return {
+                layer: (e[r], flag[r], btok[r])
+                for r, layer in enumerate(layers)
+            }
 
         def fn(params, x, pos, exited, chosen, caches, probe_rows=None):
             trace_counts[key] = trace_counts.get(key, 0) + 1
@@ -771,20 +845,57 @@ class TierExecutor:
                 # permutation of it) and remember which batch rows that
                 # covers for the report.
                 pr_idx = probe_rows.astype(jnp.int32) % sub
-                plan_hidden = {
-                    l: collected[l] for l in {*branches, *extra}
-                }
-                probe_hidden = {l: collected[l][pr_idx] for l in probe}
-                bl = _branch_logits(params, plan_hidden, cfg)
-                blp = _branch_logits(params, probe_hidden, cfg)
             else:
                 pr_idx = None
-                bl = _branch_logits(params, collected, cfg)
-                blp = bl
+            if batched_heads:
+                # ---- batched heads: the segment's kept branches, probe
+                # heads and degrade fallback evaluate as ONE stacked
+                # (K, sub, D) projection against the shared unembedding +
+                # ONE multi-head entropy/flag/argmax launch.  A sampled
+                # probe (probe_m) runs at a different width, so its heads
+                # form a second (K_probe, probe_m, D) stack — still one
+                # projection + one launch for all probe heads.  Exit
+                # precedence is applied afterwards on the per-head (B,)
+                # rows in the same sorted-layer order as the sequential
+                # path; the per-head kernel outputs are mask-independent,
+                # so the result is bitwise identical.
+                main_layers = (
+                    eval_layers if probe_m is None
+                    else tuple(sorted({*branches, *extra}))
+                )
+                mls, mlg = branch_logits_stacked(
+                    params, collected, cfg, main_layers
+                )
+                dec = {} if mlg is None else head_decisions(mls, mlg[:, :, 0])
+                pdec = dec
+                if probe_m is not None and probe:
+                    probe_hidden = {l: collected[l][pr_idx] for l in probe}
+                    pls, plg = branch_logits_stacked(
+                        params, probe_hidden, cfg, tuple(sorted(probe))
+                    )
+                    pdec = head_decisions(pls, plg[:, :, 0])
+                bl = blp = None
+            else:
+                # ---- sequential reference path: one projection + one
+                # exit-decision launch per head (the parity baseline).
+                if probe_m is not None:
+                    plan_hidden = {
+                        l: collected[l] for l in {*branches, *extra}
+                    }
+                    probe_hidden = {l: collected[l][pr_idx] for l in probe}
+                    bl = branch_logits_per_head(params, plan_hidden, cfg)
+                    blp = branch_logits_per_head(params, probe_hidden, cfg)
+                else:
+                    bl = branch_logits_per_head(params, collected, cfg)
+                    blp = bl
             takes, ents, ptakes, pents = [], [], [], []
             for layer in eval_layers:
                 if layer in plan_set:
-                    take, e, btok = exit_decision(bl[layer][:, 0], ex)
+                    if batched_heads:
+                        e, flag, btok = dec[layer]
+                        take = flag & ~ex
+                    else:
+                        take, e, btok = exit_decision(bl[layer][:, 0], ex)
                     ch = jnp.where(take, btok, ch)
                     ex = ex | take
                     takes.append(take)
@@ -792,7 +903,11 @@ class TierExecutor:
                 elif layer in probe_set:
                     # probe: report-only, never alters the trajectory
                     exp = ex if pr_idx is None else ex[pr_idx]
-                    take, e, _ = exit_decision(blp[layer][:, 0], exp)
+                    if batched_heads:
+                        e, flag, _ = pdec[layer]
+                        take = flag & ~exp
+                    else:
+                        take, e, _ = exit_decision(blp[layer][:, 0], exp)
                     ptakes.append(take)
                     pents.append(e)
                 # else: the degrade fallback head, consumed below.
@@ -801,8 +916,13 @@ class TierExecutor:
                 # still-unexited row from the fallback head (threshold
                 # ignored — the link below is dead, this IS the answer)
                 # and advance the cache step clock, which normally
-                # happens on the head tier.
-                dtok = jnp.argmax(bl[degrade][:, 0], -1).astype(jnp.int32)
+                # happens on the head tier.  The batched path reads the
+                # fallback token from the stacked launch's argmax row
+                # (bitwise jnp.argmax, see kernels/entropy_exit.py).
+                dtok = (
+                    dec[degrade][2] if batched_heads
+                    else jnp.argmax(bl[degrade][:, 0], -1).astype(jnp.int32)
+                )
                 ch = jnp.where(ex, ch, dtok)
                 ex = jnp.ones_like(ex)
                 new_caches = dict(new_caches)

@@ -21,6 +21,15 @@ For each bundle, the baseline is ``git show <ref>:<file>`` (ref from
 Exit status: 0 = clean (including "no committed baseline yet" — the
 first run seeds the trajectory); 1 = strict mismatch or timing
 regression.
+
+Besides the pass/fail diff, every run appends each bundle's metrics to
+``BENCH_history.jsonl`` (override with ``REPRO_BENCH_HISTORY``; empty
+disables) — an append-only per-PR trend series: one JSON line per
+(bench, git_sha) with the flattened strict+timing metrics of every cell.
+Committing the file alongside the bundles gives the repo a queryable
+perf trajectory across PRs (e.g. the ``heads/probe_step_k5`` speedup
+over time) instead of only the latest snapshot.  A run whose metrics are
+identical to the last recorded entry for that bench is not re-appended.
 """
 
 from __future__ import annotations
@@ -33,6 +42,9 @@ import sys
 TOL = float(os.environ.get("REPRO_BENCH_TOL", "3.0"))
 REF = os.environ.get("REPRO_BENCH_REF", "HEAD")
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HISTORY = os.environ.get(
+    "REPRO_BENCH_HISTORY", os.path.join(REPO_ROOT, "BENCH_history.jsonl")
+)
 
 
 def committed(relpath: str) -> dict | None:
@@ -48,11 +60,53 @@ def committed(relpath: str) -> dict | None:
         return None
 
 
+def append_history(cur: dict) -> None:
+    """Append this bundle's metrics to the append-only trend series.
+
+    One line per run: ``{"bench", "git_sha", "cells": {name: metrics}}``
+    with each cell's strict and timing metrics flattened together.  The
+    series is per-PR, not per-invocation: a run identical to the last
+    recorded entry for the same bench (re-running the checker in one
+    working tree) is skipped, so the file only grows when the numbers or
+    the commit change.
+    """
+    if not HISTORY:
+        return
+    entry = {
+        "bench": cur.get("bench"),
+        "git_sha": cur.get("git_sha"),
+        "cells": {
+            name: {**cell.get("strict", {}), **cell.get("timing", {})}
+            for name, cell in cur.get("cells", {}).items()
+        },
+    }
+    last = None
+    if os.path.exists(HISTORY):
+        with open(HISTORY) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if rec.get("bench") == entry["bench"]:
+                    last = rec
+    if last is not None and all(
+        last.get(k) == entry[k] for k in ("bench", "git_sha", "cells")
+    ):
+        return
+    with open(HISTORY, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+
+
 def check_bundle(path: str) -> list[str]:
     """Returns a list of human-readable problems (empty = clean)."""
     rel = os.path.relpath(os.path.abspath(path), REPO_ROOT)
     with open(path) as f:
         cur = json.load(f)
+    append_history(cur)
     base = committed(rel)
     if base is None:
         print(f"{rel}: no committed baseline at {REF} — seeding trajectory")

@@ -7,9 +7,13 @@
 # masked-vs-compacted FLOPs assertion, the 1-sync invariant, the
 # serial-vs-pipelined overlap cell, the continuous-vs-lock-step request
 # cell (Poisson arrivals, recycled KV slots — REPRO_BENCH_FAST runs it;
-# `make bench-requests` selects it alone), and every Pallas kernel path
-# (interpret mode off-TPU, identical-trajectory assert inline) are
-# exercised end to end on every CI pass.
+# `make bench-requests` selects it alone), every Pallas kernel path
+# (interpret mode off-TPU, identical-trajectory assert inline), and the
+# batched-exit-heads cells (multi-head kernel bitwise vs single-head,
+# plus the heads/probe_step_k5 batched-vs-sequential decode step with
+# its bitwise-trajectory assert) are exercised end to end on every CI
+# pass.  bench_check also appends each bundle's metrics to the
+# BENCH_history.jsonl per-PR trend series.
 # A second pytest process then runs the multi-device lane: XLA_FLAGS
 # must create the 8 virtual CPU devices *before jax initializes*, so the
 # sharded-tier equivalence tests (tests/test_sharded_tiers.py — SPMD
